@@ -1,0 +1,20 @@
+"""Figure 3: average execution time of random app sets at LOW load
+(1..5 apps, fewer than the 6 x86 cores) for x86 / FPGA / ARM / Xar-Trek."""
+from benchmarks.common import Timer, emit, run_app_set
+
+
+def main() -> None:
+    for n in (1, 2, 3, 4, 5):
+        with Timer() as t:
+            x86 = run_app_set("always_host", n, 0)
+            fpga = run_app_set("always_accel", n, 0)
+            arm = run_app_set("always_aux", n, 0)
+            xar = run_app_set("xartrek", n, 0)
+        gain_vs_fpga = 100.0 * (fpga - xar) / fpga
+        emit(f"fig3/{n}apps", t.us / 4,
+             f"x86={x86:.0f} fpga={fpga:.0f} arm={arm:.0f} xar={xar:.0f} "
+             f"gain_vs_fpga={gain_vs_fpga:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

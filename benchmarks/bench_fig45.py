@@ -1,0 +1,18 @@
+"""Figures 4/5: random app sets under MEDIUM (60 procs) and HIGH (120
+procs) background load; Xar-Trek vs the no-migration baselines."""
+from benchmarks.common import Timer, emit, run_app_set
+
+
+def main() -> None:
+    for fig, n_bg in (("fig4_medium", 50), ("fig5_high", 114)):
+        for n in (5, 10, 15, 20, 25):
+            with Timer() as t:
+                x86 = run_app_set("always_host", n, n_bg)
+                xar = run_app_set("xartrek", n, n_bg)
+            gain = 100.0 * (x86 - xar) / x86
+            emit(f"{fig}/{n}apps", t.us / 2,
+                 f"x86={x86:.0f} xar={xar:.0f} gain={gain:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Figure 6: face-detection throughput (images/min) vs background load.
+
+The multi-image FaceDet320 app calls its selected function once per
+image; the scheduler re-decides per call.  Past the FPGA threshold
+Xar-Trek migrates and throughput jumps (paper: ~4x).  Also shows the
+pre-configuration effect: Xar-Trek with a hot bank beats always-FPGA
+with a cold one.
+"""
+from benchmarks.common import BG, Timer, emit, make_sim
+from repro.core.sim import PAPER_APPS
+
+WINDOW_MS = 60_000.0
+
+
+def throughput(policy: str, n_bg: int, hot_bank: bool) -> float:
+    sim = make_sim(policy, hot_bank=hot_bank)
+    for _ in range(n_bg):
+        sim.submit(BG, at=0.0, background=True)
+    app = PAPER_APPS["facedet320"]
+    sim.submit(app, at=10.0, calls=1000)
+    sim.run(until=WINDOW_MS, stop_when_idle=False)
+    return sim.completed_calls("facedet320") / (WINDOW_MS / 1e3)
+
+
+def main() -> None:
+    for n_bg in (0, 25, 50, 75, 100):
+        with Timer() as t:
+            x86 = throughput("always_host", n_bg, hot_bank=True)
+            fpga_cold = throughput("always_accel", n_bg, hot_bank=False)
+            xar = throughput("xartrek", n_bg, hot_bank=True)
+        ratio = xar / max(x86, 1e-9)
+        emit(f"fig6/{n_bg}bg", t.us / 3,
+             f"x86={x86:.2f}img/s fpga_cold={fpga_cold:.2f} "
+             f"xar={xar:.2f} xar_vs_x86={ratio:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

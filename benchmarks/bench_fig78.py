@@ -1,0 +1,54 @@
+"""Figures 7/8: periodic (wave) workloads.
+
+Fig 7: thirty waves of 20 apps launched every 30 s (medium->high->medium
+load over time); average execution time for x86 / FPGA / Xar-Trek.
+Fig 8: face-detection throughput under a 10..120-process wave.
+"""
+import random
+
+from benchmarks.common import BG, Timer, emit, make_sim
+from repro.core.sim import PAPER_APPS
+
+
+def fig7(policy: str, waves: int = 12, per_wave: int = 20,
+         interval_ms: float = 30_000.0) -> float:
+    sim = make_sim(policy)
+    rng = random.Random(11)
+    apps = list(PAPER_APPS.values())
+    for w in range(waves):
+        for _ in range(per_wave):
+            sim.submit(rng.choice(apps), at=w * interval_ms)
+    sim.run()
+    return sim.avg_execution_ms()
+
+
+def fig8(policy: str) -> float:
+    sim = make_sim(policy)
+    # wave of background processes: 10 -> 120 -> 10
+    for i in range(120):
+        start = abs((i % 120) - 60) * 500.0
+        sim.submit(BG, at=start, background=True)
+    sim.submit(PAPER_APPS["facedet320"], at=100.0, calls=1000)
+    sim.run(until=60_000.0, stop_when_idle=False)
+    return sim.completed_calls("facedet320") / 60.0
+
+
+def main() -> None:
+    with Timer() as t:
+        x86 = fig7("always_host")
+        fpga = fig7("always_accel")
+        xar = fig7("xartrek")
+    emit("fig7/periodic_exec", t.us / 3,
+         f"x86={x86:.0f} fpga={fpga:.0f} xar={xar:.0f} "
+         f"gain_vs_x86={100*(x86-xar)/x86:.0f}% "
+         f"gain_vs_fpga={100*(fpga-xar)/fpga:.0f}%")
+    with Timer() as t:
+        x86 = fig8("always_host")
+        fpga = fig8("always_accel")
+        xar = fig8("xartrek")
+    emit("fig8/periodic_throughput", t.us / 3,
+         f"x86={x86:.2f}img/s fpga={fpga:.2f} xar={xar:.2f}")
+
+
+if __name__ == "__main__":
+    main()

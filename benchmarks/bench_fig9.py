@@ -1,0 +1,30 @@
+"""Figure 9: profitable-workload fraction.  Fixed 120-process load,
+10-app sets sweeping the CG_A (FPGA-hostile) : Digit2000 (FPGA-friendly)
+ratio from 0% to 100% hostile."""
+from benchmarks.common import BG, Timer, emit, make_sim
+from repro.core.sim import PAPER_APPS
+
+
+def run(policy: str, n_hostile: int) -> float:
+    sim = make_sim(policy)
+    for _ in range(110):
+        sim.submit(BG, at=0.0, background=True)
+    for i in range(10):
+        app = PAPER_APPS["cg_a"] if i < n_hostile else PAPER_APPS["digit2000"]
+        sim.submit(app, at=10.0)
+    sim.run()
+    return sim.avg_execution_ms()
+
+
+def main() -> None:
+    for n_hostile in (0, 2, 4, 5, 6, 8, 10):
+        with Timer() as t:
+            x86 = run("always_host", n_hostile)
+            xar = run("xartrek", n_hostile)
+        gain = 100.0 * (x86 - xar) / x86
+        emit(f"fig9/{n_hostile*10}pct_hostile", t.us / 2,
+             f"x86={x86:.0f} xar={xar:.0f} gain={gain:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Roofline table: aggregates the dry-run artifacts (§Roofline).
+
+Reads artifacts/dryrun/*.json and prints, per (arch x shape x mesh):
+the three terms, the bottleneck, peak bytes/device, useful-compute ratio
+and the roofline fraction.  Run the dry-run first:
+    python -m repro.launch.dryrun --all --both-meshes
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = (os.path.join("artifacts", "dryrun_final")
+       if os.path.isdir(os.path.join("artifacts", "dryrun_final"))
+       else os.path.join("artifacts", "dryrun"))
+
+
+def rows():
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            yield json.load(f)
+
+
+def main() -> None:
+    count = ok = 0
+    for rec in rows():
+        count += 1
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] != "ok":
+            emit(name, 0.0, f"SKIP({rec['reason'][:60]})")
+            continue
+        ok += 1
+        r = rec["roofline"]
+        m = rec["memory"]
+        emit(name, rec["compile_s"] * 1e6,
+             f"tC={r['t_compute_s']:.3f}s tM={r['t_memory_s']:.3f}s "
+             f"tX={r['t_collective_s']:.3f}s bn={r['bottleneck']} "
+             f"useful={r['useful_compute_ratio']:.2f} "
+             f"frac={r['roofline_fraction']:.3f} "
+             f"peak={m['peak_bytes']/2**30:.2f}GiB")
+    emit("roofline/summary", 0.0, f"{ok} compiled cells of {count} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Table 1: per-benchmark execution times on x86 / FPGA / ARM.
+
+The profiles are the calibration inputs (from the paper's measurements);
+this benchmark runs each app in isolation through the simulator on each
+forced target and checks the sim reproduces the isolated times exactly
+(queueing-free), i.e. the platform model is faithful at the fixed point.
+"""
+from benchmarks.common import Timer, emit, make_sim
+from repro.core.sim import PAPER_APPS
+
+
+def main() -> None:
+    policies = [("always_host", "x86"), ("always_accel", "fpga"),
+                ("always_aux", "arm")]
+    for app in PAPER_APPS.values():
+        row = []
+        with Timer() as t:
+            for policy, label in policies:
+                sim = make_sim(policy)
+                sim.submit(app, at=0.0)
+                sim.run()
+                row.append((label, sim.avg_execution_ms()))
+        want = {"x86": app.x86_ms, "fpga": app.fpga_ms, "arm": app.arm_ms}
+        for label, got in row:
+            ok = abs(got - want[label]) < 1e-6
+            emit(f"table1/{app.name}/{label}", t.us / 3,
+                 f"{got:.0f}ms(expected {want[label]:.0f} ok={ok})")
+
+
+if __name__ == "__main__":
+    main()

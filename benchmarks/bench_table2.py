@@ -1,0 +1,27 @@
+"""Table 2: threshold estimation (step G) vs the paper's values."""
+import math
+
+from benchmarks.common import Timer, emit
+from repro.core.estimator import estimate_table
+from repro.core.sim import PAPER_APPS
+
+PAPER_TABLE2 = {  # benchmark -> (FPGA_THR, ARM_THR)
+    "cg_a": (31, 25), "facedet320": (16, 31), "facedet640": (0, 23),
+    "digit500": (0, 18), "digit2000": (0, 17),
+}
+
+
+def main() -> None:
+    with Timer() as t:
+        table = estimate_table(PAPER_APPS)
+    for row in table.as_table2():
+        name = row["Benchmark"]
+        fpga = max(0, math.ceil(row["FPGA_THR"]))
+        arm = max(0, math.ceil(row["ARM_THR"]))
+        pf, pa = PAPER_TABLE2[name]
+        emit(f"table2/{name}", t.us / len(PAPER_TABLE2),
+             f"FPGA_THR={fpga}(paper {pf}) ARM_THR={arm}(paper {pa})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Table 4: BFS (pointer-chasing) is FPGA-hostile at every size — the
+estimator must refuse to produce a finite FPGA threshold, so Xar-Trek
+always leaves BFS on x86."""
+from benchmarks.common import Timer, emit
+from repro.core.estimator import estimate_table
+from repro.core.sim import BFS_TABLE4, bfs_profile
+from repro.core.thresholds import INF
+
+
+def main() -> None:
+    for nodes, (x86_ms, fpga_ms) in BFS_TABLE4.items():
+        app = bfs_profile(nodes)
+        with Timer() as t:
+            table = estimate_table({app.name: app}, max_load=64)
+        thr = table.rows[app.name].fpga_thr
+        emit(f"table4/bfs{nodes}", t.us,
+             f"x86={x86_ms}ms fpga={fpga_ms}ms fpga_thr="
+             f"{'inf(never migrate)' if thr == INF else thr}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Shared helpers for the paper-table/figure benchmarks.
+
+Output convention (benchmarks/run.py): every benchmark prints CSV rows
+``name,us_per_call,derived`` where ``derived`` carries the figure's
+headline quantity (a gain %, a threshold, a throughput...).
+"""
+from __future__ import annotations
+
+import copy
+import random
+import time
+
+from repro.core.estimator import estimate_table
+from repro.core.sim import AppProfile, MGB_MS, PAPER_APPS, PlatformSim
+from repro.core.thresholds import ThresholdTable
+
+BG = AppProfile("mgb", MGB_MS, MGB_MS, MGB_MS, "KNL_MGB")
+ALL_KERNELS = tuple(a.hw_kernel for a in PAPER_APPS.values())
+
+
+def fresh_table() -> ThresholdTable:
+    t = ThresholdTable()
+    t.rows = {k: copy.deepcopy(v)
+              for k, v in estimate_table(PAPER_APPS).rows.items()}
+    return t
+
+
+def make_sim(policy: str, *, hot_bank: bool = True,
+             reconfig_ms: float = 4000.0) -> PlatformSim:
+    return PlatformSim(policy=policy, table=fresh_table(),
+                       reconfig_ms=reconfig_ms,
+                       preconfigure=ALL_KERNELS if hot_bank else ())
+
+
+def run_app_set(policy: str, n_apps: int, n_bg: int, seed: int = 42,
+                hot_bank: bool = True) -> float:
+    """Average execution time (ms) of a random app set under bg load."""
+    sim = make_sim(policy, hot_bank=hot_bank)
+    for _ in range(n_bg):
+        sim.submit(BG, at=0.0, background=True)
+    rng = random.Random(seed)
+    apps = list(PAPER_APPS.values())
+    for _ in range(n_apps):
+        sim.submit(rng.choice(apps), at=10.0)
+    sim.run()
+    return sim.avg_execution_ms()
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6

@@ -1,0 +1,74 @@
+"""The paper's multi-tenant evaluation in one script.
+
+Replays the calibrated platform (Xeon + ThunderX + Alveo, Table 1
+profiles) through the REAL Xar-Trek scheduler (Algorithms 1+2) across the
+paper's scenarios, printing side-by-side numbers vs the no-migration
+baselines:
+
+    PYTHONPATH=src python examples/multi_tenant_sim.py
+"""
+import random
+
+from repro.core.estimator import estimate_table
+from repro.core.sim import AppProfile, MGB_MS, PAPER_APPS, PlatformSim
+from repro.core.thresholds import ThresholdTable
+import copy
+
+
+def fresh_table() -> ThresholdTable:
+    t = ThresholdTable()
+    t.rows = {k: copy.deepcopy(v)
+              for k, v in estimate_table(PAPER_APPS).rows.items()}
+    return t
+
+
+BG = AppProfile("mgb", MGB_MS, MGB_MS, MGB_MS, "KNL_MGB")
+KERNELS = tuple(a.hw_kernel for a in PAPER_APPS.values())
+
+
+def scenario(name: str, n_apps: int, n_bg: int) -> None:
+    print(f"\n=== {name}: {n_apps} apps, {n_bg} background processes ===")
+    results = {}
+    for policy in ("always_host", "always_accel", "always_aux", "xartrek"):
+        sim = PlatformSim(policy=policy, table=fresh_table(),
+                          preconfigure=KERNELS)
+        for _ in range(n_bg):
+            sim.submit(BG, at=0.0, background=True)
+        rng = random.Random(42)
+        apps = list(PAPER_APPS.values())
+        for _ in range(n_apps):
+            sim.submit(rng.choice(apps), at=10.0)
+        sim.run()
+        results[policy] = sim.avg_execution_ms()
+        dec = {k.value: v for k, v in sim.decisions.items() if v}
+        print(f"  {policy:13s} avg={results[policy]:9.0f} ms  "
+              f"decisions={dec}")
+    x86, xar = results["always_host"], results["xartrek"]
+    print(f"  -> Xar-Trek vs vanilla x86: "
+          f"{100 * (x86 - xar) / x86:+.0f}% "
+          f"(paper range at this load band: 88%..1%)")
+
+
+def threshold_report() -> None:
+    print("=== Threshold estimation (paper Table 2) ===")
+    import math
+    paper = {"cg_a": (31, 25), "facedet320": (16, 31), "facedet640": (0, 23),
+             "digit500": (0, 18), "digit2000": (0, 17)}
+    for row in estimate_table(PAPER_APPS).as_table2():
+        name = row["Benchmark"]
+        f = max(0, math.ceil(row["FPGA_THR"]))
+        a = max(0, math.ceil(row["ARM_THR"]))
+        print(f"  {name:12s} FPGA_THR={f:3d} (paper {paper[name][0]:3d})  "
+              f"ARM_THR={a:3d} (paper {paper[name][1]:3d})")
+
+
+def main() -> None:
+    threshold_report()
+    scenario("low load (Fig 3)", n_apps=5, n_bg=0)
+    scenario("medium load (Fig 4)", n_apps=10, n_bg=50)
+    scenario("high load (Fig 5)", n_apps=10, n_bg=114)
+    scenario("FPGA-hostile mix (Fig 9)", n_apps=10, n_bg=110)
+
+
+if __name__ == "__main__":
+    main()

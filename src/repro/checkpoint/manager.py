@@ -1,0 +1,181 @@
+"""Fault-tolerant checkpointing with elastic resharding restore.
+
+Layout (one directory per step, atomically renamed into place):
+
+    ckpt_dir/
+      step_000100/
+        MANIFEST.json        # treedef paths, shapes, dtypes, step, meta
+        <leaf-path>.npy      # one file per pytree leaf (process 0 here;
+                             # multi-host would write per-process shards)
+      step_000200/ ...
+      LATEST                 # text file naming the newest valid step dir
+
+Restore accepts *different* shardings than those saved with — the
+elastic-restart path: after a node failure shrinks the mesh, leaves are
+device_put onto the new mesh's shardings.  Atomicity: a step directory
+is written under a tmp name and renamed only after MANIFEST.json is
+fsync'd, so a crash mid-save never corrupts LATEST.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "__".join(parts) or "leaf"
+
+
+def save_checkpoint(directory: str, step: int, state: Any,
+                    meta: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=directory)
+    try:
+        leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+        manifest = {"step": step, "meta": meta or {}, "leaves": []}
+        for path, leaf in leaves:
+            name = _leaf_name(path)
+            arr = np.asarray(jax.device_get(leaf))
+            np.save(os.path.join(tmp, name + ".npy"), arr)
+            manifest["leaves"].append(
+                {"name": name, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype)})
+        mpath = os.path.join(tmp, "MANIFEST.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    latest = os.path.join(directory, "LATEST")
+    with open(latest + ".tmp", "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(latest + ".tmp", latest)
+    return final
+
+
+def latest_step_dir(directory: str) -> Optional[str]:
+    latest = os.path.join(directory, "LATEST")
+    if os.path.exists(latest):
+        with open(latest) as f:
+            cand = os.path.join(directory, f.read().strip())
+        if os.path.exists(os.path.join(cand, "MANIFEST.json")):
+            return cand
+    # fall back to scanning (LATEST lost in a crash)
+    steps = sorted(
+        d for d in os.listdir(directory) if re.fullmatch(r"step_\d+", d)
+    ) if os.path.isdir(directory) else []
+    for d in reversed(steps):
+        if os.path.exists(os.path.join(directory, d, "MANIFEST.json")):
+            return os.path.join(directory, d)
+    return None
+
+
+def restore_checkpoint(directory: str, target: Any,
+                       shardings: Any = None) -> tuple[Any, int, dict]:
+    """Restore into the structure of ``target`` (pytree of anything with
+    .shape/.dtype).  ``shardings`` (same structure) enables elastic
+    resharding onto a new mesh.  Returns (state, step, meta)."""
+    step_dir = latest_step_dir(directory)
+    if step_dir is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    with open(os.path.join(step_dir, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    dtypes = {l["name"]: l["dtype"] for l in manifest["leaves"]}
+    paths = jax.tree_util.tree_flatten_with_path(target)[0]
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    out_leaves = []
+    for (path, leaf), sh in zip(paths, shard_leaves):
+        name = _leaf_name(path)
+        arr = np.load(os.path.join(step_dir, name + ".npy"))
+        if arr.dtype.kind == "V":  # ml_dtypes (bf16/...) round-trip as void
+            arr = arr.view(jax.numpy.dtype(dtypes[name]))
+        expect = tuple(leaf.shape)
+        if tuple(arr.shape) != expect:
+            raise ValueError(
+                f"{name}: checkpoint shape {arr.shape} != target {expect}")
+        if sh is not None:
+            out_leaves.append(jax.device_put(arr, sh))
+        else:
+            out_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    tree = jax.tree.structure(target)
+    return (jax.tree.unflatten(tree, out_leaves), manifest["step"],
+            manifest.get("meta", {}))
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    save_async: bool = False
+
+    def __post_init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, state: Any, meta: Optional[dict] = None) -> None:
+        if self.save_async:
+            self.wait()
+            # snapshot to host before handing to the thread
+            host_state = jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), state)
+            self._thread = threading.Thread(
+                target=self._save_and_gc, args=(step, host_state, meta),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._save_and_gc(step, state, meta)
+
+    def _save_and_gc(self, step, state, meta):
+        try:
+            save_checkpoint(self.directory, step, state, meta)
+            self._gc()
+        except BaseException as e:  # surfaced on next wait()
+            self._error = e
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(
+            d for d in os.listdir(self.directory)
+            if re.fullmatch(r"step_\d+", d))
+        for d in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, d),
+                          ignore_errors=True)
+
+    def restore(self, target: Any, shardings: Any = None):
+        return restore_checkpoint(self.directory, target, shardings)
+
+    def has_checkpoint(self) -> bool:
+        return (os.path.isdir(self.directory)
+                and latest_step_dir(self.directory) is not None)

@@ -1,0 +1,90 @@
+"""Architecture registry: the 10 assigned archs + reduced smoke variants."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.model_config import ModelConfig, ShapeConfig, SHAPES, TrainConfig
+
+from repro.configs.smollm_135m import CONFIG as SMOLLM_135M
+from repro.configs.smollm_360m import CONFIG as SMOLLM_360M
+from repro.configs.qwen15_32b import CONFIG as QWEN15_32B
+from repro.configs.yi_6b import CONFIG as YI_6B
+from repro.configs.zamba2_1p2b import CONFIG as ZAMBA2_1P2B
+from repro.configs.olmoe_1b_7b import CONFIG as OLMOE_1B_7B
+from repro.configs.granite_moe_1b import CONFIG as GRANITE_MOE_1B
+from repro.configs.pixtral_12b import CONFIG as PIXTRAL_12B
+from repro.configs.mamba2_2p7b import CONFIG as MAMBA2_2P7B
+from repro.configs.musicgen_medium import CONFIG as MUSICGEN_MEDIUM
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        SMOLLM_135M, QWEN15_32B, YI_6B, SMOLLM_360M, ZAMBA2_1P2B,
+        OLMOE_1B_7B, GRANITE_MOE_1B, PIXTRAL_12B, MAMBA2_2P7B,
+        MUSICGEN_MEDIUM,
+    )
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch, shape) cell runs; reason when skipped."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: long_500k excluded per "
+                       "assignment (sub-quadratic attention required); "
+                       "see DESIGN.md §4")
+    return True, ""
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Same-family reduced config for CPU smoke tests.
+
+    Keeps the awkward properties (odd head counts that need TP padding,
+    GQA ratios, codebooks, shared-block cadence) at toy sizes.
+    """
+    kw: dict = dict(
+        name=cfg.name + "-reduced",
+        num_layers=min(cfg.num_layers, 4),
+        d_model=128,
+        vocab_size=257 if cfg.vocab_size % 16 else 256,
+        remat="nothing",
+        kv_cache_dtype=cfg.kv_cache_dtype,
+    )
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        # preserve "heads don't divide TP" quirks where the full arch has them
+        heads = 3 if cfg.num_heads % 2 else 4
+        kv = max(1, heads // max(cfg.num_heads // max(cfg.num_kv_heads, 1), 1))
+        kw.update(num_heads=heads, num_kv_heads=kv, head_dim=32,
+                  d_ff=256 if cfg.family != "moe" else 64)
+    if cfg.family == "moe":
+        kw.update(num_experts=8, top_k=2)
+    if cfg.family in ("ssm", "hybrid"):
+        kw.update(ssm_state=16, ssm_headdim=16, ssm_chunk=32)
+        if cfg.family == "hybrid":
+            kw.update(num_layers=4, attn_every=2, num_heads=4, num_kv_heads=4,
+                      head_dim=32, d_ff=256)
+        else:
+            kw.update(num_heads=0, num_kv_heads=0, d_ff=0)
+    if cfg.family == "vlm":
+        kw.update(num_patches=8)
+    if cfg.family == "audio":
+        kw.update(num_codebooks=cfg.num_codebooks, vocab_size=64)
+    return dataclasses.replace(cfg, **kw)
+
+
+SMOKE_SHAPES: dict[str, ShapeConfig] = {
+    "smoke_train": ShapeConfig("smoke_train", 64, 2, "train"),
+    "smoke_prefill": ShapeConfig("smoke_prefill", 64, 2, "prefill"),
+    "smoke_decode": ShapeConfig("smoke_decode", 64, 2, "decode"),
+}

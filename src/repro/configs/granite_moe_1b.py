@@ -1,0 +1,14 @@
+"""granite-moe-1b-a400m [moe] — 32 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf].
+
+vocab 49155 is not TP-divisible; padded to 49168 (Megatron-style), padded
+columns masked out of the loss.
+"""
+from repro.configs.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=8,
+    d_ff=512, vocab_size=49155, head_dim=64, mlp_type="swiglu",
+    num_experts=32, top_k=8,
+)

@@ -1,0 +1,13 @@
+"""mamba2-2.7b [ssm] — SSD (state-space duality) [arXiv:2405.21060; unverified].
+
+Attention-free: decode state is O(1) in context length, so decode_32k and
+long_500k lower with a constant-size (conv_state, ssd_state) cache.
+"""
+from repro.configs.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b", family="ssm",
+    num_layers=64, d_model=2560, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_headdim=64, ssm_expand=2, ssm_chunk=256,
+)

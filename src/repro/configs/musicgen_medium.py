@@ -1,0 +1,15 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens
+[arXiv:2306.05284; hf].
+
+The EnCodec/conditioning frontend is a STUB per the assignment: inputs
+are the 4-codebook token grids; embeddings of the 4 codebooks are summed
+and 4 output heads predict the next frame's codebooks.
+"""
+from repro.configs.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="audio",
+    num_layers=48, d_model=1536, num_heads=24, num_kv_heads=24,
+    d_ff=6144, vocab_size=2048, head_dim=64, mlp_type="gelu",
+    num_codebooks=4,
+)

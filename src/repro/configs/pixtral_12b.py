@@ -1,0 +1,16 @@
+"""pixtral-12b [vlm] — pixtral-ViT + mistral-nemo backbone
+[hf:mistralai/Pixtral-12B-2409; unverified].
+
+The ViT frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings (B, num_patches, d_model) which overwrite
+the first ``num_patches`` token embeddings; loss is masked to text
+positions.
+"""
+from repro.configs.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b", family="vlm",
+    num_layers=40, d_model=5120, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=131072, head_dim=128, mlp_type="swiglu",
+    num_patches=1024,
+)

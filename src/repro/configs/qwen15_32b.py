@@ -1,0 +1,14 @@
+"""qwen1.5-32b [dense] — QKV bias [hf:Qwen/Qwen1.5-0.5B; hf].
+
+kv=40 == heads (MHA).  decode_32k KV cache at bf16 would be 5.5 TB
+(21.5 GB/chip on 256 chips, over the v5e 16 GB budget) so this arch uses
+an int8 KV cache; see EXPERIMENTS.md §Dry-run.
+"""
+from repro.configs.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b", family="dense",
+    num_layers=64, d_model=5120, num_heads=40, num_kv_heads=40,
+    d_ff=27392, vocab_size=152064, head_dim=128, qkv_bias=True,
+    mlp_type="swiglu", kv_cache_dtype="int8",
+)

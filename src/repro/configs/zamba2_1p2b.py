@@ -1,0 +1,9 @@
+"""zamba2-1.2b [hybrid] — Mamba2 + shared attn blocks [arXiv:2411.15242; hf]."""
+from repro.configs.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32000, head_dim=64, mlp_type="swiglu",
+    ssm_state=64, ssm_headdim=64, ssm_expand=2, attn_every=6,
+)

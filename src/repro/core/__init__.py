@@ -1,0 +1,19 @@
+"""Xar-Trek core: run-time execution migration across heterogeneous targets.
+
+The paper's contribution, adapted to a JAX/TPU fleet (DESIGN.md §2):
+
+  compiler side                      run-time side
+  -------------                      -------------
+  profile.py     (step A)            monitor.py    (x86 CPU load)
+  function.py    (step B)            thresholds.py (Algorithm 1)
+  binary.py      (step C, Popcorn)   policy.py     (Algorithm 2)
+  kernel_bank.py (steps D-F, XCLBIN) scheduler.py  (client/server)
+  estimator.py   (step G)            migration.py  (state transformation)
+                                     runtime.py    (ties it together)
+  sim.py: calibrated discrete-event platform model used to reproduce the
+  paper's evaluation (Tables 1-4, Figures 3-9) on this CPU-only box.
+"""
+from repro.core.targets import TargetKind, ExecutionTarget, DEFAULT_PLATFORM
+from repro.core.thresholds import ThresholdTable, ThresholdRow
+from repro.core.policy import schedule, Decision
+from repro.core.scheduler import SchedulerServer, SchedulerClient

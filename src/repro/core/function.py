@@ -1,0 +1,78 @@
+"""Step B — instrumentation: the MigratableFunction registry.
+
+A MigratableFunction is one *selected function* from the profiling
+manifest: a pure JAX callable with one implementation ("variant") per
+execution target, all sharing the same input/output pytree ABI.  The
+instrumentation the paper injects around call sites (scheduler client
+query before the call, threshold update after the return, FPGA
+pre-configuration at main()) lives in runtime.XarTrekRuntime.call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core.targets import TargetKind
+
+
+@dataclasses.dataclass
+class MigratableFunction:
+    name: str
+    app: str
+    variants: dict[TargetKind, Callable]        # pure fns, identical ABI
+    # optional per-target jit sharding hints (in_shardings/out_shardings)
+    shardings: dict[TargetKind, tuple] = dataclasses.field(
+        default_factory=dict)
+    # abstract input signature for AOT compilation (filled by binary.py
+    # from example args when not given)
+    input_specs: Optional[tuple] = None
+
+    def targets(self) -> tuple[TargetKind, ...]:
+        return tuple(self.variants)
+
+    def check_abi(self, example_args: tuple) -> None:
+        """Symbol-alignment analogue: all variants must agree on the
+        output pytree structure and leaf shapes/dtypes."""
+        results = {}
+        for kind, fn in self.variants.items():
+            out = jax.eval_shape(fn, *example_args)
+            results[kind] = jax.tree.structure(out), [
+                (l.shape, str(l.dtype)) for l in jax.tree.leaves(out)]
+        ref_kind = next(iter(results))
+        for kind, (tree, leaves) in results.items():
+            if (tree, leaves) != results[ref_kind]:
+                raise ValueError(
+                    f"{self.name}: ABI mismatch between {ref_kind} and "
+                    f"{kind}: {results[ref_kind]} vs {(tree, leaves)}")
+
+
+class FunctionRegistry:
+    def __init__(self):
+        self._fns: dict[str, MigratableFunction] = {}
+
+    def register(self, fn: MigratableFunction) -> MigratableFunction:
+        if fn.name in self._fns:
+            raise ValueError(f"duplicate migratable function {fn.name!r}")
+        self._fns[fn.name] = fn
+        return fn
+
+    def get(self, name: str) -> MigratableFunction:
+        return self._fns[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._fns
+
+    def names(self) -> list[str]:
+        return sorted(self._fns)
+
+
+GLOBAL_REGISTRY = FunctionRegistry()
+
+
+def migratable(name: str, app: str, **variant_fns) -> MigratableFunction:
+    """Convenience: migratable("knn", "digitrec", host=f, accel=g)."""
+    variants = {TargetKind(k): v for k, v in variant_fns.items()}
+    return GLOBAL_REGISTRY.register(
+        MigratableFunction(name=name, app=app, variants=variants))

@@ -1,0 +1,49 @@
+"""Run-time state transformation: migrate a live state pytree between
+targets (the Popcorn stack/register transformation analogue).
+
+In JAX the program state at a function boundary is an explicit pytree
+(params, optimizer state, KV cache, RNG), so source->destination
+transformation is a resharding ``device_put``.  ``check_abi`` mirrors
+Popcorn's requirement that both sides agree on the symbol layout: the
+treedefs and leaf shapes/dtypes must match exactly; only shardings may
+differ.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import jax
+
+
+class AbiMismatch(ValueError):
+    pass
+
+
+def check_abi(state: Any, dst_shardings: Any) -> None:
+    s_tree = jax.tree.structure(state)
+    d_tree = jax.tree.structure(dst_shardings)
+    if s_tree != d_tree:
+        raise AbiMismatch(
+            f"state/sharding trees differ: {s_tree} vs {d_tree}")
+
+
+def migrate(state: Any, dst_shardings: Any, *,
+            measure: bool = False) -> Any | tuple[Any, float]:
+    """Reshard ``state`` onto the destination target's shardings.
+
+    With ``measure=True`` returns (state, seconds) — the in-locus
+    migration cost the estimator folds into its thresholds (§3.1 G).
+    """
+    check_abi(state, dst_shardings)
+    t0 = time.perf_counter()
+    out = jax.device_put(state, dst_shardings)
+    if measure:
+        out = jax.block_until_ready(out)
+        return out, time.perf_counter() - t0
+    return out
+
+
+def migration_bytes(state: Any) -> int:
+    """Upper bound of bytes moved by a migration (full state size)."""
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(state))

@@ -1,0 +1,42 @@
+"""Load monitor: the paper's "x86 CPU load" (#processes) + Table-3 bands."""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+from repro.core.targets import Platform, TargetKind
+
+
+@dataclasses.dataclass
+class LoadMonitor:
+    platform: Platform
+
+    def __post_init__(self):
+        self._active: dict[TargetKind, int] = {k: 0 for k in TargetKind}
+        self._lock = threading.Lock()
+
+    def job_started(self, kind: TargetKind) -> None:
+        with self._lock:
+            self._active[kind] += 1
+
+    def job_finished(self, kind: TargetKind) -> None:
+        with self._lock:
+            self._active[kind] = max(0, self._active[kind] - 1)
+
+    def active(self, kind: TargetKind) -> int:
+        with self._lock:
+            return self._active[kind]
+
+    def x86_load(self) -> float:
+        """The scheduling signal: processes on (or queued for) the host."""
+        return float(self.active(TargetKind.HOST))
+
+    def band(self, total_processes: int) -> str:
+        """Table 3: low/medium/high by #processes vs core counts."""
+        host = self.platform.host.capacity
+        total = self.platform.total_cores
+        if total_processes < host:
+            return "low"
+        if total_processes <= total:
+            return "medium"
+        return "high"

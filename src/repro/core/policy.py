@@ -1,0 +1,51 @@
+"""Algorithm 2 — Xar-Trek's scheduling policy, faithful port.
+
+Inputs: current x86 load, the app's threshold row, and whether the app's
+hardware kernel is resident on the accelerator.  Output: the migration
+flag (HOST/AUX/ACCEL) plus whether to kick an asynchronous accelerator
+reconfiguration (the latency-hiding trick of §3.4: while the kernel is
+being loaded, execution continues on a CPU target).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.targets import TargetKind
+from repro.core.thresholds import ThresholdRow
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    target: TargetKind
+    reconfigure: bool = False      # start async ACCEL load of this kernel
+
+    @property
+    def flag(self) -> int:
+        return self.target.flag
+
+
+def schedule(cpu_load: float, row: ThresholdRow,
+             kernel_resident: bool) -> Decision:
+    """One Algorithm-2 evaluation (lines annotated)."""
+    arm_thr, fpga_thr = row.arm_thr, row.fpga_thr
+
+    if (cpu_load <= arm_thr) and (cpu_load > fpga_thr) and not kernel_resident:
+        # l.9-13: stay on x86, reconfigure FPGA in the background
+        return Decision(TargetKind.HOST, reconfigure=True)
+    if (cpu_load > arm_thr) and (cpu_load > fpga_thr) and not kernel_resident:
+        # l.14-18: migrate to ARM, reconfigure FPGA in the background
+        return Decision(TargetKind.AUX, reconfigure=True)
+    if (cpu_load <= arm_thr) and (cpu_load <= fpga_thr):
+        # l.19-21: low load -> stay on x86
+        return Decision(TargetKind.HOST)
+    if (cpu_load > arm_thr) and (cpu_load <= fpga_thr):
+        # l.22-24: only ARM profitable
+        return Decision(TargetKind.AUX)
+    if (cpu_load > fpga_thr) and kernel_resident:
+        # l.25-31: smaller threshold implies smaller execution time
+        if fpga_thr < arm_thr:                                  # l.26-27
+            return Decision(TargetKind.ACCEL)
+        return Decision(TargetKind.AUX)                         # l.29-30
+    # unreachable given the four exhaustive load/residency cases above,
+    # but the paper's default is "continue on x86"
+    return Decision(TargetKind.HOST)

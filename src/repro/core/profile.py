@@ -1,0 +1,78 @@
+"""Step A — profiling manifest.
+
+The paper's manual profiling step emits a text file naming (1) the
+hardware platform, (2) the applications, and (3) the selected functions
+per application.  We keep that exact artifact (it seeds instrumentation
+and the Xilinx-object/XCLBIN steps) as a parse/serialize round-trippable
+format:
+
+    platform: tpu-v5e-256
+    application: digitrec
+      function: knn_digits targets: host,aux,accel
+    application: facedet
+      function: window_scores targets: host,accel
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class FunctionEntry:
+    name: str
+    targets: tuple[str, ...]       # subset of {host, aux, accel}
+
+
+@dataclasses.dataclass
+class ApplicationEntry:
+    name: str
+    functions: list[FunctionEntry] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ProfileManifest:
+    platform: str
+    applications: list[ApplicationEntry] = dataclasses.field(
+        default_factory=list)
+
+    def selected(self) -> list[tuple[str, FunctionEntry]]:
+        return [(app.name, fn) for app in self.applications
+                for fn in app.functions]
+
+    def dumps(self) -> str:
+        lines = [f"platform: {self.platform}"]
+        for app in self.applications:
+            lines.append(f"application: {app.name}")
+            for fn in app.functions:
+                lines.append(
+                    f"  function: {fn.name} targets: {','.join(fn.targets)}")
+        return "\n".join(lines) + "\n"
+
+    @classmethod
+    def loads(cls, text: str) -> "ProfileManifest":
+        platform = ""
+        apps: list[ApplicationEntry] = []
+        for raw in text.splitlines():
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            if line.startswith("platform:"):
+                platform = line.split(":", 1)[1].strip()
+            elif line.startswith("application:"):
+                apps.append(ApplicationEntry(line.split(":", 1)[1].strip()))
+            elif line.startswith("function:"):
+                body = line.split(":", 1)[1]
+                name, _, tgt = body.partition("targets:")
+                apps[-1].functions.append(FunctionEntry(
+                    name.strip(),
+                    tuple(t.strip() for t in tgt.split(",") if t.strip())))
+        return cls(platform=platform, applications=apps)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.dumps())
+
+    @classmethod
+    def load(cls, path: str) -> "ProfileManifest":
+        with open(path) as f:
+            return cls.loads(f.read())

@@ -1,0 +1,129 @@
+"""XarTrekRuntime — the JAX-native integration of compiler + run-time.
+
+Ties the pieces together for *real* jitted step functions:
+
+  * ``prepare`` is the instrumentation the paper injects at main() start:
+    eagerly compile the HOST variant, kick the ACCEL variant's
+    asynchronous load (FPGA pre-configuration), seed the threshold table.
+  * ``call`` is the instrumented call site: scheduler-client query ->
+    execute the chosen compiled variant -> measure -> report (Alg. 1).
+  * live state handed between variants is resharded via migration.py
+    when targets disagree on shardings.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+import jax
+
+from repro.core.binary import MultiTargetBinary
+from repro.core.function import GLOBAL_REGISTRY, FunctionRegistry, MigratableFunction
+from repro.core.kernel_bank import KernelBank
+from repro.core.migration import migrate
+from repro.core.monitor import LoadMonitor
+from repro.core.scheduler import SchedulerClient, SchedulerServer
+from repro.core.targets import Platform, TargetKind, TPU_PLATFORM
+from repro.core.thresholds import ThresholdTable
+
+
+class XarTrekRuntime:
+    def __init__(self, platform: Platform = TPU_PLATFORM,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 registry: FunctionRegistry = GLOBAL_REGISTRY,
+                 table: Optional[ThresholdTable] = None,
+                 policy: str = "xartrek",
+                 bank_slots: Optional[int] = None,
+                 min_reconfig_seconds: float = 0.0):
+        self.platform = platform
+        self.mesh = mesh
+        self.registry = registry
+        self.table = table or ThresholdTable()
+        self.binaries: dict[str, MultiTargetBinary] = {}
+        self._specs: dict[str, tuple] = {}
+        self.bank = KernelBank(
+            slots=bank_slots or platform.accel_slots,
+            load_fn=self._load_accel,
+            min_load_seconds=min_reconfig_seconds)
+        self.monitor = LoadMonitor(platform)
+        self.server = SchedulerServer(platform, self.table, self.bank,
+                                      self.monitor, policy=policy)
+        self._clients: dict[str, SchedulerClient] = {}
+        self.call_log: list[dict] = []
+
+    # ----------------------------------------------------------- prepare
+    def prepare(self, fn_name: str, *example_args,
+                table_row: Optional[dict] = None) -> None:
+        """main()-start instrumentation: compile HOST now, pre-configure
+        ACCEL asynchronously, seed thresholds."""
+        fn = self.registry.get(fn_name)
+        fn.check_abi(example_args)
+        specs = tuple(jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), a)
+            for a in example_args)
+        self._specs[fn_name] = example_args
+        binary = MultiTargetBinary(fn, mesh=self.mesh)
+        self.binaries[fn_name] = binary
+        binary.compile(TargetKind.HOST, *specs)
+        if TargetKind.AUX in fn.variants:
+            binary.compile(TargetKind.AUX, *specs)
+        row = self.table.row(fn.app, hw_kernel=fn_name)
+        if table_row:
+            for k, v in table_row.items():
+                setattr(row, k, v)
+        if TargetKind.ACCEL in fn.variants:
+            self.bank.load_async(fn_name)   # pre-configuration
+
+    def _load_accel(self, fn_name: str):
+        binary = self.binaries[fn_name]
+        specs = tuple(jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), a)
+            for a in self._specs[fn_name])
+        return binary.compile(TargetKind.ACCEL, *specs)
+
+    # -------------------------------------------------------------- call
+    def _client(self, app: str) -> SchedulerClient:
+        if app not in self._clients:
+            self._clients[app] = SchedulerClient(app, self.server)
+        return self._clients[app]
+
+    def call(self, fn_name: str, *args,
+             state_shardings: Optional[dict] = None) -> Any:
+        """The instrumented call site (steps B + §3.2)."""
+        fn = self.registry.get(fn_name)
+        binary = self.binaries[fn_name]
+        client = self._client(fn.app)
+
+        decision = client.before_call()
+        kind = decision.target
+        if kind == TargetKind.ACCEL and not binary.is_compiled(kind):
+            kind = TargetKind.HOST           # bank raced; fall back
+        if kind not in fn.variants:
+            kind = TargetKind.HOST
+
+        if state_shardings and kind in state_shardings:
+            args = migrate(args, state_shardings[kind])
+
+        self.monitor.job_started(kind)
+        t0 = time.perf_counter()
+        try:
+            out = binary.variants[kind](*args)
+            out = jax.block_until_ready(out)
+        finally:
+            self.monitor.job_finished(kind)
+        dt = time.perf_counter() - t0
+        client.after_call(kind, dt * 1e3)
+        self.call_log.append({"fn": fn_name, "target": kind.value,
+                              "ms": dt * 1e3,
+                              "reconfigure": decision.reconfigure})
+        return out
+
+    # ------------------------------------------------------------- stats
+    def summary(self) -> dict:
+        per_target = {k.value: 0 for k in TargetKind}
+        for rec in self.call_log:
+            per_target[rec["target"]] += 1
+        return {"calls": len(self.call_log), "per_target": per_target,
+                "bank": dict(self.bank.stats),
+                "decisions": {k.value: v
+                              for k, v in self.server.decisions.items()}}

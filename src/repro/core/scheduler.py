@@ -1,0 +1,155 @@
+"""Run-time scheduler: client/server split, as in the paper (§3.2).
+
+The server owns the policy (Algorithm 2), the threshold table
+(Algorithm 1 updates arrive via client reports), the kernel bank and
+the load monitor.  A client instance is bound to each application/job;
+it queries the server *before* the selected function's call (receiving
+the migration flag) and reports *after* it returns.
+
+Two transports: in-process (default — one JAX process drives the fleet)
+and a line-JSON TCP transport mirroring the paper's socket setup (used
+by the multi-process example and tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import socket
+import socketserver
+import threading
+from typing import Callable, Optional
+
+from repro.core.kernel_bank import KernelBank
+from repro.core.monitor import LoadMonitor
+from repro.core.policy import Decision, schedule
+from repro.core.targets import Platform, TargetKind
+from repro.core.thresholds import ThresholdTable
+
+
+class SchedulerServer:
+    def __init__(self, platform: Platform, table: ThresholdTable,
+                 bank: KernelBank,
+                 monitor: Optional[LoadMonitor] = None,
+                 policy: str = "xartrek"):
+        self.platform = platform
+        self.table = table
+        self.bank = bank
+        self.monitor = monitor or LoadMonitor(platform)
+        self.policy = policy     # xartrek | always_host | always_aux | always_accel
+        self._lock = threading.Lock()
+        self.decisions = {k: 0 for k in TargetKind}
+        self.reconfigs = 0
+
+    # ------------------------------------------------------------- server
+    def request(self, app: str) -> Decision:
+        """Handle one client scheduling request (Algorithm 2 l.5-8)."""
+        with self._lock:
+            if self.policy == "always_host":
+                d = Decision(TargetKind.HOST)
+            elif self.policy == "always_aux":
+                d = Decision(TargetKind.AUX)
+            elif self.policy == "always_accel":
+                d = Decision(TargetKind.ACCEL)
+            else:
+                row = self.table.row(app)
+                load = self.monitor.x86_load()
+                d = schedule(load, row, self.bank.is_resident(row.hw_kernel))
+            self.decisions[d.target] += 1
+        if d.reconfigure:
+            self.reconfigs += 1
+            self.bank.load_async(self.table.row(app).hw_kernel)
+        return d
+
+    def report(self, app: str, executed_on: TargetKind, exec_time: float,
+               cpu_load: Optional[float] = None) -> None:
+        """Client post-return report -> Algorithm 1 threshold update."""
+        load = self.monitor.x86_load() if cpu_load is None else cpu_load
+        with self._lock:
+            self.table.update(app, executed_on, exec_time, load)
+
+
+@dataclasses.dataclass
+class SchedulerClient:
+    """Instrumented into each application binary (step B)."""
+
+    app: str
+    server: SchedulerServer
+
+    def before_call(self) -> Decision:
+        return self.server.request(self.app)
+
+    def after_call(self, executed_on: TargetKind, exec_time: float,
+                   cpu_load: Optional[float] = None) -> None:
+        self.server.report(self.app, executed_on, exec_time, cpu_load)
+
+
+# --------------------------------------------------------------- TCP mode
+
+class _Handler(socketserver.StreamRequestHandler):
+    def handle(self):
+        for raw in self.rfile:
+            try:
+                msg = json.loads(raw)
+                if msg["op"] == "request":
+                    d = self.server.xar.request(msg["app"])
+                    resp = {"flag": d.flag, "reconfigure": d.reconfigure}
+                elif msg["op"] == "report":
+                    self.server.xar.report(
+                        msg["app"], TargetKind(msg["target"]),
+                        float(msg["exec_time"]), msg.get("cpu_load"))
+                    resp = {"ok": True}
+                else:
+                    resp = {"error": f"unknown op {msg['op']}"}
+            except Exception as e:  # noqa: BLE001 — report to client
+                resp = {"error": str(e)}
+            self.wfile.write((json.dumps(resp) + "\n").encode())
+            self.wfile.flush()
+
+
+class TcpSchedulerServer:
+    """Paper-faithful socket transport around a SchedulerServer."""
+
+    def __init__(self, inner: SchedulerServer, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.inner = inner
+        self._srv = socketserver.ThreadingTCPServer((host, port), _Handler)
+        self._srv.daemon_threads = True
+        self._srv.xar = inner
+        self.address = self._srv.server_address
+        self._thread = threading.Thread(target=self._srv.serve_forever,
+                                        daemon=True)
+
+    def start(self) -> tuple[str, int]:
+        self._thread.start()
+        return self.address
+
+    def stop(self) -> None:
+        self._srv.shutdown()
+        self._srv.server_close()
+
+
+class TcpSchedulerClient:
+    def __init__(self, app: str, address: tuple[str, int]):
+        self.app = app
+        self._sock = socket.create_connection(address)
+        self._file = self._sock.makefile("rw")
+
+    def _rpc(self, msg: dict) -> dict:
+        self._file.write(json.dumps(msg) + "\n")
+        self._file.flush()
+        return json.loads(self._file.readline())
+
+    def before_call(self) -> Decision:
+        resp = self._rpc({"op": "request", "app": self.app})
+        kind = {0: TargetKind.HOST, 1: TargetKind.AUX,
+                2: TargetKind.ACCEL}[resp["flag"]]
+        return Decision(kind, reconfigure=resp["reconfigure"])
+
+    def after_call(self, executed_on: TargetKind, exec_time: float,
+                   cpu_load: Optional[float] = None) -> None:
+        self._rpc({"op": "report", "app": self.app,
+                   "target": executed_on.value, "exec_time": exec_time,
+                   "cpu_load": cpu_load})
+
+    def close(self) -> None:
+        self._sock.close()

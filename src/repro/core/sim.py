@@ -1,0 +1,266 @@
+"""Calibrated discrete-event simulation of the paper's platform (§4).
+
+This CPU-only container cannot time a Xeon + ThunderX + Alveo server, so
+the paper's *evaluation* is reproduced on a processor-sharing simulator
+whose per-app/target execution profiles are seeded from the paper's own
+measurements (Table 1, Table 4).  The scheduler under test is the real
+one — ``policy.schedule`` (Algorithm 2) + ``ThresholdTable.update``
+(Algorithm 1) — exercised through the same request/report interface the
+JAX-native runtime uses.
+
+Model:
+  * HOST pool: 6 cores, processor sharing (rate = min(1, cores/active)).
+  * AUX pool: 96 cores, processor sharing.
+  * ACCEL: serial FIFO device; non-resident kernels need a reconfiguration
+    delay first (bounded residency slots, LRU).
+  * A job's work is its isolated execution time on the chosen target
+    (the Table-1 totals already include migration/data-transfer cost,
+    the paper's in-locus measurement).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Optional
+
+from repro.core.policy import schedule
+from repro.core.targets import DEFAULT_PLATFORM, Platform, TargetKind
+from repro.core.thresholds import ThresholdTable
+
+INF = math.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class AppProfile:
+    """Per-target isolated execution times (ms) — Table 1 calibration."""
+
+    name: str
+    x86_ms: float
+    fpga_ms: float
+    arm_ms: float
+    hw_kernel: str
+
+    def work_ms(self, kind: TargetKind) -> float:
+        return {TargetKind.HOST: self.x86_ms, TargetKind.ACCEL: self.fpga_ms,
+                TargetKind.AUX: self.arm_ms}[kind]
+
+
+# Table 1 of the paper (milliseconds).
+PAPER_APPS: dict[str, AppProfile] = {
+    "cg_a": AppProfile("cg_a", 2182, 10597, 8406, "KNL_HW_CG_A"),
+    "facedet320": AppProfile("facedet320", 175, 332, 642, "KNL_HW_FD320"),
+    "facedet640": AppProfile("facedet640", 885, 832, 2991, "KNL_HW_FD640"),
+    "digit500": AppProfile("digit500", 883, 470, 2281, "KNL_HW_DR500"),
+    "digit2000": AppProfile("digit2000", 3521, 1229, 8963, "KNL_HW_DR200"),
+}
+
+# Table 4: BFS (graph nodes -> ms); FPGA-hostile pointer chasing.
+BFS_TABLE4 = {
+    1000: (3.36, 726.50),
+    2000: (115.74, 2282.54),
+    3000: (256.94, 4981.05),
+    4000: (458.04, 8760.80),
+    5000: (721.48, 13524.76),
+}
+
+
+def bfs_profile(nodes: int) -> AppProfile:
+    x86, fpga = BFS_TABLE4[nodes]
+    # ARM ~ x86 scaled by the pools' single-thread ratio (not in Table 4).
+    return AppProfile(f"bfs{nodes}", x86, fpga, x86 / 0.26,
+                      f"KNL_HW_BFS{nodes}")
+
+
+# The paper's background load generator (NPB MG-B instances).
+MGB_MS = 30_000.0
+
+
+@dataclasses.dataclass
+class Job:
+    jid: int
+    app: AppProfile
+    arrival: float
+    calls: int = 1                     # selected-function invocations
+    background: bool = False           # MG-B load generator (host-pinned)
+    # runtime state
+    target: Optional[TargetKind] = None
+    remaining: float = 0.0
+    calls_done: int = 0
+    start: float = 0.0
+    call_start: float = 0.0
+    finish: float = -1.0
+
+
+class PlatformSim:
+    def __init__(self, platform: Platform = DEFAULT_PLATFORM,
+                 table: Optional[ThresholdTable] = None,
+                 policy: str = "xartrek",
+                 reconfig_ms: float = 4000.0,
+                 accel_slots: int = 4,
+                 preconfigure: tuple[str, ...] = ()):
+        self.platform = platform
+        self.policy = policy
+        self.table = table or ThresholdTable()
+        self.reconfig_ms = reconfig_ms
+        self.accel_slots = accel_slots
+        self.now = 0.0
+        self.running: dict[TargetKind, list[Job]] = {k: [] for k in TargetKind}
+        self.accel_queue: list[Job] = []
+        self.resident: dict[str, float] = {}    # kernel -> last_used
+        self.reconfig_until = 0.0
+        self.reconfig_kernel: Optional[str] = None
+        self.pending: list[tuple[float, int, Job]] = []   # arrival heap
+        self.done: list[Job] = []
+        self._jid = 0
+        self.decisions = {k: 0 for k in TargetKind}
+        for kern in preconfigure:
+            self._make_resident(kern)
+
+    # ------------------------------------------------------------- set-up
+    def submit(self, app: AppProfile, at: float = 0.0, calls: int = 1,
+               background: bool = False) -> Job:
+        self._jid += 1
+        job = Job(self._jid, app, at, calls=calls, background=background)
+        heapq.heappush(self.pending, (at, self._jid, job))
+        return job
+
+    # ------------------------------------------------------------ helpers
+    def _make_resident(self, kernel: str) -> None:
+        if kernel in self.resident:
+            self.resident[kernel] = self.now
+            return
+        if len(self.resident) >= self.accel_slots:
+            victim = min(self.resident, key=self.resident.get)
+            del self.resident[victim]
+        self.resident[kernel] = self.now
+
+    def host_load(self) -> float:
+        """The paper's x86 CPU load: processes on the host pool."""
+        return float(len(self.running[TargetKind.HOST]))
+
+    def _rate(self, job: Job) -> float:
+        kind = job.target
+        if kind == TargetKind.ACCEL:
+            return 1.0 if self.accel_queue and self.accel_queue[0] is job else 0.0
+        pool = self.running[kind]
+        cap = self.platform.by_kind(kind).capacity
+        n = len(pool)
+        return min(1.0, cap / n) if n else 1.0
+
+    # --------------------------------------------------------- scheduling
+    def _decide(self, job: Job) -> TargetKind:
+        if job.background:
+            return TargetKind.HOST
+        if self.policy == "always_host":
+            return TargetKind.HOST
+        if self.policy == "always_aux":
+            return TargetKind.AUX
+        if self.policy == "always_accel":
+            self._ensure_kernel(job.app.hw_kernel)
+            return TargetKind.ACCEL
+        row = self.table.row(job.app.name, job.app.hw_kernel)
+        resident = job.app.hw_kernel in self.resident
+        d = schedule(self.host_load(), row, resident)
+        if d.reconfigure:
+            self._ensure_kernel(job.app.hw_kernel)
+        return d.target
+
+    def _ensure_kernel(self, kernel: str) -> None:
+        """Start an async reconfiguration if the device is free."""
+        if kernel in self.resident:
+            return
+        if self.reconfig_kernel is None or self.now >= self.reconfig_until:
+            self.reconfig_kernel = kernel
+            self.reconfig_until = self.now + self.reconfig_ms
+
+    def _start_call(self, job: Job) -> None:
+        kind = self._decide(job)
+        job.target = kind
+        job.remaining = job.app.work_ms(kind)
+        self.decisions[kind] += 1
+        self.running[kind].append(job)
+        if kind == TargetKind.ACCEL:
+            self.accel_queue.append(job)
+
+    def _finish_call(self, job: Job) -> None:
+        kind = job.target
+        self.running[kind].remove(job)
+        if kind == TargetKind.ACCEL:
+            self.accel_queue.remove(job)
+            self.resident[job.app.hw_kernel] = self.now
+        job.calls_done += 1
+        if not job.background and self.policy == "xartrek":
+            # Algorithm 1: report observed time + load after the return
+            elapsed = self.now - job.call_start
+            self.table.update(job.app.name, kind, elapsed, self.host_load())
+        if job.calls_done >= job.calls:
+            job.finish = self.now
+            self.done.append(job)
+        else:
+            self._start_call(job)
+            job.call_start = self.now
+
+    # -------------------------------------------------------------- run
+    def run(self, until: float = INF,
+            stop_when_idle: bool = True) -> None:
+        while True:
+            # activate arrivals at the current time
+            while self.pending and self.pending[0][0] <= self.now + 1e-9:
+                _, _, job = heapq.heappop(self.pending)
+                job.start = self.now
+                job.call_start = self.now
+                self._start_call(job)
+
+            active = [j for pool in self.running.values() for j in pool]
+            if not active and not self.pending:
+                if stop_when_idle:
+                    return
+            if self.now >= until:
+                return
+
+            # completion of the reconfiguration
+            events = []
+            if self.reconfig_kernel is not None and self.reconfig_until > self.now:
+                events.append(self.reconfig_until - self.now)
+            # next arrival
+            if self.pending:
+                events.append(self.pending[0][0] - self.now)
+            # next job completion under current rates
+            for j in active:
+                r = self._rate(j)
+                if r > 0:
+                    events.append(j.remaining / r)
+            if not events:
+                return
+            dt = max(min(events), 1e-9)
+            dt = min(dt, until - self.now) if until < INF else dt
+
+            # advance work
+            for j in active:
+                j.remaining -= dt * self._rate(j)
+            self.now += dt
+
+            if (self.reconfig_kernel is not None
+                    and self.now >= self.reconfig_until - 1e-9):
+                self._make_resident(self.reconfig_kernel)
+                self.reconfig_kernel = None
+
+            for j in list(active):
+                if j.remaining <= 1e-6:
+                    self._finish_call(j)
+
+    # ------------------------------------------------------------ metrics
+    def avg_execution_ms(self, include_background: bool = False) -> float:
+        jobs = [j for j in self.done
+                if include_background or not j.background]
+        if not jobs:
+            return 0.0
+        return sum(j.finish - j.start for j in jobs) / len(jobs)
+
+    def completed_calls(self, app_name: str) -> int:
+        total = 0
+        for j in self.done + [x for p in self.running.values() for x in p]:
+            if j.app.name == app_name:
+                total += j.calls_done
+        return total

@@ -1,0 +1,117 @@
+"""Deterministic synthetic data pipeline with sharded host loading.
+
+Every value is a pure function of (seed, step, GLOBAL row index), so any
+restart — including an *elastic* restart onto a different mesh, or a
+different sharding layout entirely — replays the identical stream (the
+property tests/test_train_checkpoint.py and the elastic-restore test pin
+down).  Each host process materialises only its device shards
+(``make_array_from_callback``), the standard multi-host JAX loading
+pattern; on this single-process container that degenerates gracefully.
+
+The token stream is a per-row Markov chain (token[t] = f(token[t-1]) 75%
+of the time) so smoke-training shows a falling loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.model_config import ModelConfig, ShapeConfig
+
+
+def _row_tokens(seed: int, step: int, row: int, shape: tuple,
+                vocab: int) -> np.ndarray:
+    """Tokens for one global batch row (any trailing dims)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step, row]))
+    base = rng.integers(0, vocab, size=shape, dtype=np.int64)
+    mix = rng.random(shape) < 0.75
+    out = base.copy()
+    for t in range(1, shape[-1]):
+        out[..., t] = np.where(mix[..., t],
+                               (out[..., t - 1] * 31 + 7) % vocab,
+                               base[..., t])
+    return out.astype(np.int32)
+
+
+def _row_floats(seed: int, step: int, row: int, shape: tuple) -> np.ndarray:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step, row, 77]))
+    return (rng.standard_normal(shape) * 0.02).astype(np.float32)
+
+
+@dataclasses.dataclass
+class SyntheticPipeline:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    seed: int = 0
+    mesh: Optional[Mesh] = None
+    batch_spec: Optional[dict] = None     # PartitionSpecs per field
+
+    def _field_shape(self, name: str) -> tuple:
+        B, S = self.shape.global_batch, self.shape.seq_len
+        K = self.cfg.num_codebooks
+        if name in ("tokens", "labels"):
+            if self.cfg.family == "audio" and K > 1:
+                return (B, K, S)
+            return (B, S)
+        if name == "patch_embeds":
+            return (B, min(self.cfg.num_patches, S), self.cfg.d_model)
+        raise KeyError(name)
+
+    def fields(self) -> list[str]:
+        out = ["tokens", "labels"]
+        if self.cfg.family == "vlm":
+            out.append("patch_embeds")
+        return out
+
+    def _make_field(self, name: str, step: int) -> jax.Array:
+        shape = self._field_shape(name)
+        vocab = self.cfg.vocab_size
+
+        def region(index: tuple) -> np.ndarray:
+            """Values for one shard region, by GLOBAL row coordinates.
+
+            Only the leading (batch) dim may be sharded by the batch
+            specs; trailing dims are generated whole per row and sliced,
+            so every layout sees identical values.
+            """
+            row_lo = index[0].start or 0
+            row_hi = index[0].stop or shape[0]
+            rows = []
+            for r in range(row_lo, row_hi):
+                if name == "patch_embeds":
+                    rows.append(_row_floats(self.seed, step, r, shape[1:]))
+                else:
+                    toks = _row_tokens(self.seed, step, r, shape[1:], vocab)
+                    if name == "labels":
+                        toks = np.roll(toks, -1, axis=-1)
+                    rows.append(toks)
+            block = np.stack(rows)
+            trailing = tuple(s for s in index[1:])
+            return block[(slice(None),) + trailing]
+
+        if self.mesh is None:
+            full = region(tuple(slice(0, s) for s in shape))
+            return jnp.asarray(full)
+        from repro.parallel.sharding import named
+        spec = (self.batch_spec or {}).get(name)
+        sharding = named(self.mesh, spec if spec is not None else P())
+        return jax.make_array_from_callback(shape, sharding, region)
+
+    def batch(self, step: int) -> dict:
+        out = {name: self._make_field(name, step) for name in self.fields()}
+        if "patch_embeds" in out:
+            out["patch_embeds"] = out["patch_embeds"].astype(jnp.bfloat16)
+        return out
+
+
+def make_global_batch(cfg: ModelConfig, shape: ShapeConfig, step: int = 0,
+                      seed: int = 0, mesh: Optional[Mesh] = None,
+                      batch_spec: Optional[dict] = None) -> dict:
+    return SyntheticPipeline(cfg, shape, seed=seed, mesh=mesh,
+                             batch_spec=batch_spec).batch(step)

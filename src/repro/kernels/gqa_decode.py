@@ -1,0 +1,92 @@
+"""Single-token decode attention over a long KV cache — Pallas TPU kernel.
+
+Flash-decoding style: grid ``(batch*heads, kv_blocks)`` streams the
+cache through VMEM with online-softmax accumulators in scratch (one
+q-row per program), masked at the live length.  This is the ACCEL
+variant of the decode hot function (the serve-path analogue of the
+paper's hardware kernel); oracle: ``ref.decode_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, idx_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, block_k: int, kv_blocks: int, scale: float):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (1, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    live = idx_ref[0]                                 # attend over [0, live]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    s = jnp.where(kpos <= live, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+def gqa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+               index: jax.Array, *, block_k: int = 512,
+               interpret: bool = False) -> jax.Array:
+    """q: (BH, 1, hd); k_cache/v_cache: (BH, Smax, hd); index: () int32.
+
+    Attends over cache positions [0, index].  BH = batch * q-heads with
+    the cache already head-expanded by the ops wrapper.
+    """
+    BH, _, hd = q.shape
+    Smax = k_cache.shape[1]
+    block_k = min(block_k, Smax)
+    assert Smax % block_k == 0, (Smax, block_k)
+    nk = Smax // block_k
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               kv_blocks=nk, scale=scale)
+    idx = jnp.broadcast_to(index.astype(jnp.int32), (1,))
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, ki: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki: (b, ki, 0)),
+            pl.BlockSpec((1,), lambda b, ki: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, ki: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, idx)

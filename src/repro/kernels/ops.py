@@ -1,0 +1,157 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On TPU the kernels compile natively; on this CPU-only container they
+execute in ``interpret=True`` mode (Python evaluation of the kernel
+body) for correctness validation.  The wrappers also do the model-facing
+plumbing: GQA head expansion, head_dim padding to MXU lanes, flattening
+(B, S, H, hd) <-> (BH, S, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gqa_decode as _gd
+from repro.kernels import haar_window as _hw
+from repro.kernels import knn_digits as _knn
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import rmsnorm as _rms
+from repro.kernels import ssd_scan as _ssd
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret(flag) -> bool:
+    if flag is None:
+        return not on_tpu()
+    return flag
+
+
+def _pad_lanes(x: jax.Array, axis: int, multiple: int = 128) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret", "kv_index"))
+def flash_attention(q, k, v, *, kv_index: tuple | None = None,
+                    causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool | None = None):
+    """Model-facing fused attention.  q: (B,S,Hp,hd); k/v: (B,T,KV,hd)."""
+    B, S, Hp, hd = q.shape
+    T = k.shape[1]
+    if kv_index is not None:
+        idx = np.asarray(kv_index)
+        k = k[:, :, idx, :]
+        v = v[:, :, idx, :]
+    qf = _pad_lanes(q.transpose(0, 2, 1, 3).reshape(B * Hp, S, hd), -1)
+    kf = _pad_lanes(k.transpose(0, 2, 1, 3).reshape(B * Hp, T, hd), -1)
+    vf = _pad_lanes(v.transpose(0, 2, 1, 3).reshape(B * Hp, T, hd), -1)
+    # zero-padded value lanes produce zero outputs; padded key lanes add 0 to
+    # scores; but the softmax scale must use the REAL hd (cast the factor:
+    # a numpy scalar would promote bf16 inputs to f32):
+    scale_fix = jnp.asarray(np.sqrt(qf.shape[-1] / hd), qf.dtype)
+    out = _fa.flash_attention(qf * scale_fix, kf, vf, causal=causal,
+                              block_q=block_q, block_k=block_k,
+                              interpret=_interpret(interpret))
+    out = out[..., :hd].reshape(B, Hp, S, hd).transpose(0, 2, 1, 3)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256,
+             interpret: bool | None = None):
+    """Model-facing SSD.  x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N).
+
+    Returns (y: (B,S,H,P), state: (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, S)
+    Af = jnp.broadcast_to(A[None, :], (B, H)).reshape(B * H)
+    Bf = jnp.broadcast_to(Bm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    Cf = jnp.broadcast_to(Cm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    y, state = _ssd.ssd_scan(xf, dtf, Af, Bf, Cf, chunk=chunk,
+                             interpret=_interpret(interpret))
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    return y, state.reshape(B, H, P, N)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def grouped_matmul(x, w, group_sizes, *, block_c: int = 128,
+                   block_f: int = 128, block_d: int = 256,
+                   interpret: bool | None = None):
+    return _gmm.grouped_matmul(x, w, group_sizes, block_c=block_c,
+                               block_f=block_f, block_d=block_d,
+                               interpret=_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-5, block_rows: int = 128,
+            interpret: bool | None = None):
+    """x: (..., d) -> normalised, arbitrary leading dims."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    R = flat.shape[0]
+    br = block_rows
+    while R % br:
+        br //= 2
+    out = _rms.rmsnorm(flat, w, eps=eps, block_rows=max(br, 1),
+                       interpret=_interpret(interpret))
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def knn_digits(test, train, train_labels, *, k: int = 3,
+               interpret: bool | None = None):
+    """Full DigitRec function: distance kernel + host-side top-k vote.
+
+    test: (Nt, W) uint32; train: (Nn, W) uint32; train_labels: (Nn,) int32.
+    Returns predicted labels (Nt,) int32.
+    """
+    d = _knn.hamming_distances(test, train, interpret=_interpret(interpret))
+    _, idx = jax.lax.top_k(-d, k)                     # k smallest distances
+    votes = train_labels[idx]                          # (Nt, k)
+    counts = jax.vmap(lambda v: jnp.bincount(v, length=10))(votes)
+    return jnp.argmax(counts, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("win", "stride", "interpret"))
+def window_scores(img, feats, *, win: int = 24, stride: int = 4,
+                  interpret: bool | None = None):
+    return _hw.window_scores(img, feats, win=win, stride=stride,
+                             interpret=_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret",
+                                             "kv_index"))
+def gqa_decode(q, k_cache, v_cache, index, *, kv_index: tuple | None = None,
+               block_k: int = 512, interpret: bool | None = None):
+    """Model-facing decode attention.  q: (B,1,Hp,hd);
+    k_cache/v_cache: (B,Smax,KV,hd); index: () int32."""
+    B, _, Hp, hd = q.shape
+    Smax = k_cache.shape[1]
+    if kv_index is not None:
+        idx = np.asarray(kv_index)
+        k_cache = k_cache[:, :, idx, :]
+        v_cache = v_cache[:, :, idx, :]
+    qf = _pad_lanes(q.transpose(0, 2, 1, 3).reshape(B * Hp, 1, hd), -1)
+    kf = _pad_lanes(k_cache.transpose(0, 2, 1, 3).reshape(B * Hp, Smax, hd), -1)
+    vf = _pad_lanes(v_cache.transpose(0, 2, 1, 3).reshape(B * Hp, Smax, hd), -1)
+    scale_fix = jnp.asarray(np.sqrt(qf.shape[-1] / hd), qf.dtype)
+    out = _gd.gqa_decode(qf * scale_fix, kf, vf, index, block_k=block_k,
+                         interpret=_interpret(interpret))
+    return out[..., :hd].reshape(B, Hp, 1, hd).transpose(0, 2, 1, 3)

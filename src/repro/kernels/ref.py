@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (the HOST implementations).
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle; these
+are also the "software function" targets the Xar-Trek scheduler falls
+back to.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q: (BH, S, hd); k, v: (BH, T, hd)."""
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(S)[:, None]
+        kpos = jnp.arange(T)[None, :]
+        s = jnp.where(kpos <= qpos + (T - S), s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(q.dtype), v)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, *, chunk: int = 64):
+    """Straightforward per-(batch*head)-row scan oracle (no chunking).
+
+    x: (BH,S,P); dt: (BH,S); A: (BH,); Bm/Cm: (BH,S,N).
+    """
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+
+    def row(xr, dtr, Ar, Br, Cr):
+        def step(state, inp):
+            x_t, dt_t, B_t, C_t = inp
+            a = jnp.exp(Ar * dt_t)
+            state = state * a + jnp.outer(x_t, B_t) * dt_t
+            y = state @ C_t
+            return state, y
+
+        s0 = jnp.zeros((P, N), jnp.float32)
+        state, ys = jax.lax.scan(
+            step, s0, (xr.astype(jnp.float32), dtr.astype(jnp.float32),
+                       Br.astype(jnp.float32), Cr.astype(jnp.float32)))
+        return ys, state
+
+    y, state = jax.vmap(row)(x, dt, A, Bm, Cm)
+    return y.astype(x.dtype), state
+
+
+def grouped_matmul_ref(x, w, group_sizes):
+    """x: (E,C,D); w: (E,D,F); rows >= group_sizes[e] are zeroed."""
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    C = x.shape[1]
+    valid = jnp.arange(C)[None, :, None] < group_sizes[:, None, None]
+    return jnp.where(valid, out, 0.0).astype(x.dtype)
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def hamming_ref(test, train):
+    """test: (Nt,W) uint32; train: (Nn,W) uint32 -> (Nt,Nn) int32."""
+    x = jax.lax.population_count(test[:, None, :] ^ train[None, :, :])
+    return jnp.sum(x.astype(jnp.int32), axis=-1)
+
+
+def window_scores_ref(img, feats, *, win: int = 24, stride: int = 4):
+    """img: (H,W); feats: (F, win*win) -> (ny, nx, F)."""
+    H, W = img.shape
+    ny = (H - win) // stride + 1
+    nx = (W - win) // stride + 1
+    idx_y = jnp.arange(ny) * stride
+    idx_x = jnp.arange(nx) * stride
+    patches = jax.vmap(lambda y: jax.vmap(lambda x: jax.lax.dynamic_slice(
+        img, (y, x), (win, win)))(idx_x))(idx_y)       # (ny,nx,win,win)
+    flat = patches.reshape(ny, nx, win * win).astype(jnp.float32)
+    return jnp.einsum("yxp,fp->yxf", flat, feats.astype(jnp.float32))
+
+
+def decode_attention_ref(q, k_cache, v_cache, index):
+    """q: (BH,1,hd); caches: (BH,Smax,hd); attends over [0, index]."""
+    import numpy as np
+    BH, _, hd = q.shape
+    Smax = k_cache.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqd,bkd->bqk", q, k_cache).astype(jnp.float32) * scale
+    mask = jnp.arange(Smax)[None, None, :] <= index
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(q.dtype), v_cache)

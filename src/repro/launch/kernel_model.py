@@ -1,0 +1,94 @@
+"""Kernel-substituted roofline terms for the ACCEL (Pallas) variant.
+
+The dry-run lowers the HOST (reference) program and derives its roofline
+from the compiled HLO.  The ACCEL variant swaps the attention *function*
+for the Pallas flash kernel at the Xar-Trek function boundary; its
+roofline is the HOST walk with the attention contribution replaced by
+the kernel's analytic profile (derived from the kernel's BlockSpec
+tiling — auditable below).  Interpret-mode lowering of the kernel is a
+Python emulation and does not represent the TPU lowering, so it is not
+used for cost analysis (it IS used for correctness tests).
+
+Reference attention cost per (layer, pass), per chip, causal:
+  flops_ref  = 2 dots x 2 * Bc * Hc * S^2/2 * hd        (blockwise/causal)
+  bytes_ref  = Bc * Hc * S^2/2 * (4+4+2+2)              (f32 scores w+r,
+                                                         bf16 probs w+r)
+Kernel (block_q = block_k = 256, VMEM-resident accumulators):
+  flops_knl  = same dot flops (the MXU work is identical)
+  bytes_knl  = q + o + nq * (k + v)                     (K/V re-streamed
+                                                         once per q-block)
+Training passes: fwd + full-remat recompute use the kernel; the backward
+uses the reference VJP (a dedicated bwd kernel is future work), so the
+bwd score traffic (~2 fwd passes worth) remains in BOTH variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.model_config import ModelConfig, ShapeConfig
+
+BLOCK = 256
+
+
+@dataclasses.dataclass
+class AttnAdjustment:
+    ref_flops: float
+    ref_bytes: float
+    kernel_flops: float
+    kernel_bytes: float
+
+    @property
+    def d_flops(self) -> float:
+        return self.kernel_flops - self.ref_flops
+
+    @property
+    def d_bytes(self) -> float:
+        return self.kernel_bytes - self.ref_bytes
+
+
+def _attention_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.num_layers // max(cfg.attn_every, 1)
+    return cfg.num_layers
+
+
+def flash_adjustment(cfg: ModelConfig, shape: ShapeConfig, *,
+                     chips: int, tp: int, dp: int,
+                     microbatches: int = 1) -> AttnAdjustment:
+    """Per-chip attention-term swap for one step of the cell."""
+    S = shape.seq_len
+    heads_padded = -(-max(cfg.num_heads, 1) // tp) * tp
+    Hc = heads_padded // tp
+    hd = cfg.resolved_head_dim
+    L = _attention_layers(cfg)
+    if L == 0 or shape.kind == "decode":
+        return AttnAdjustment(0, 0, 0, 0)
+
+    B_step = shape.global_batch // max(dp, 1)        # per-chip batch
+    Bc = B_step // microbatches if shape.kind == "train" else B_step
+    n_mb = microbatches if shape.kind == "train" else 1
+
+    # fwd passes using the fused path: train = fwd + full-remat recompute
+    fwd_passes = 2.0 if shape.kind == "train" else 1.0
+    # bwd stays on the reference VJP in both variants (cancels out) — but
+    # the REF fwd passes' materialisation is what the kernel removes.
+
+    # the HOST path is plain full-square attention at S <= 8192 and the
+    # causal block schedule above that (models/attention.py:attention)
+    live_frac = (1.0 if S <= 8192
+                 else 0.5 + BLOCK / (2.0 * S))
+    pairs_elems = Bc * Hc * S * S * live_frac
+    knl_pairs = Bc * Hc * S * S * (0.5 + BLOCK / (2.0 * S))
+
+    ref_flops = 2.0 * 2.0 * pairs_elems * hd * fwd_passes * L * n_mb
+    knl_flops = 2.0 * 2.0 * knl_pairs * hd * fwd_passes * L * n_mb
+
+    ref_bytes = pairs_elems * (4 + 4 + 2 + 2) * fwd_passes * L * n_mb
+    nq = S // BLOCK
+    qo = 2.0 * Bc * Hc * S * hd * 2                  # q read + o write, bf16
+    kv = 2.0 * nq * Bc * Hc * S * hd * 2             # K+V per q-block pass
+    knl_bytes = (qo + kv) * fwd_passes * L * n_mb
+    return AttnAdjustment(ref_flops=ref_flops, ref_bytes=ref_bytes,
+                          kernel_flops=knl_flops, kernel_bytes=knl_bytes)

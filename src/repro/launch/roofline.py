@@ -1,0 +1,147 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  ``cost_analysis`` gives per-partition FLOPs/bytes;
+collective bytes are parsed from the post-SPMD optimized HLO text
+(``compiled.as_text()``), summing the operand bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute op (per-partition buffers, consistent with the other
+two terms).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+ICI_LINKS = 4                # v5e: 4 usable ICI links per chip (2D torus ring x2)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.3 = f32[128,256]{1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-buffer bytes per collective kind from optimized HLO."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "all-" not in line and "reduce-scatter" not in line \
+                and "collective-permute" not in line:
+            continue
+        if "-done(" in line:        # async pair: count the -start only
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    numel *= int(d)
+        out[kind] += numel * nbytes
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops_per_chip: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / (ICI_BW * ICI_LINKS)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """Perfect-overlap bound: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_compute_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/padding/redundancy waste."""
+        if self.flops_per_chip <= 0:
+            return 0.0
+        return self.model_flops_per_chip / self.flops_per_chip
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-model-compute time over the perfect-overlap step bound —
+        the §Perf score: how close the cell is to pure model-FLOPs
+        compute at peak."""
+        bound = self.step_time_lower_bound
+        if bound <= 0:
+            return 0.0
+        return (self.model_flops_per_chip / PEAK_FLOPS) / bound
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_compute_ratio": self.useful_compute_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape, chips: int) -> float:
+    """Analytic MODEL_FLOPS per chip for one step of the cell.
+
+    train: 6·N·D (fwd+bwd), D = global tokens; prefill: 2·N·D;
+    decode: 2·N·B tokens (one per sequence).  N excludes embedding
+    tables (standard convention) and uses active params for MoE.
+    """
+    n_active = cfg.active_param_count()
+    embed = cfg.vocab_size * cfg.d_model
+    n = max(n_active - embed, 1)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence + attention over the cache
+        total = 2.0 * n * shape.global_batch
+        if cfg.num_kv_heads and cfg.family != "ssm":
+            hd = cfg.resolved_head_dim
+            layers_attn = (cfg.num_layers if cfg.family != "hybrid"
+                           else cfg.num_layers // max(cfg.attn_every, 1))
+            # q @ K^T + p @ V over the cache
+            total += (2.0 * 2.0 * shape.global_batch * layers_attn
+                      * cfg.num_heads * hd * shape.seq_len)
+    return total / chips

@@ -1,0 +1,309 @@
+"""Unified model API over all 10 assigned architectures.
+
+``Model`` exposes pure functions (init / loss / prefill / decode) plus
+their PartitionSpecs; callers (train/serve/launch) jit them with the
+appropriate shardings.  Nothing here touches devices at import time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.model_config import ModelConfig, ShapeConfig
+from repro.models import hybrid as hybrid_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tf_lib
+from repro.models.common import (
+    init_params, param_shapes, param_specs, rmsnorm,
+)
+from repro.models.transformer import Geometry, make_rules
+from repro.parallel.mesh import MODEL_AXIS
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    geom: Geometry
+    mesh: Optional[jax.sharding.Mesh]
+
+    # ------------------------------------------------------------ params
+    @property
+    def rules(self):
+        return make_rules(self.geom, self.cfg.sharding_recipe)
+
+    def fitted_rules(self, global_batch: Optional[int] = None):
+        """Rules with the batch axes fitted to ``global_batch``: axes whose
+        product doesn't divide B are dropped (e.g. long_500k's B=1 cell
+        replicates the batch dim; the decode_32k B=128 cell shards it over
+        pod x data = 32)."""
+        rules = self.rules
+        if self.mesh is None or global_batch is None:
+            return rules
+        from repro.parallel.mesh import DATA_AXIS, POD_AXIS
+        axes = [a for a in (POD_AXIS, DATA_AXIS)
+                if a in self.mesh.axis_names]
+        if self.cfg.sharding_recipe == "dp":
+            from repro.parallel.mesh import MODEL_AXIS
+            axes = axes + [MODEL_AXIS]
+        candidates = [tuple(axes)]
+        if DATA_AXIS in axes:
+            candidates.append((DATA_AXIS,))
+        for cand in candidates:
+            prod = 1
+            for a in cand:
+                prod *= self.mesh.shape[a]
+            if cand and global_batch % prod == 0:
+                rules.rules = dict(rules.rules, batch=cand)
+                return rules
+        rules.rules = dict(rules.rules, batch=None)
+        return rules
+
+    def defs(self) -> dict:
+        cfg, geom = self.cfg, self.geom
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            return tf_lib.transformer_defs(cfg, geom)
+        base = tf_lib.transformer_defs(
+            dataclasses.replace(cfg, family="dense"), geom)
+        out = {"embed": base["embed"], "final_norm": base["final_norm"],
+               "head": base["head"]}
+        if cfg.family == "ssm":
+            out["mamba"] = ssm_lib.ssm_defs(cfg)
+        elif cfg.family == "hybrid":
+            out.update(hybrid_lib.hybrid_defs(cfg, geom))
+        else:
+            raise ValueError(cfg.family)
+        return out
+
+    def init(self, key) -> dict:
+        return init_params(key, self.defs(), jnp.dtype(self.cfg.dtype))
+
+    def specs(self) -> dict:
+        return param_specs(self.defs(), self.rules)
+
+    def shapes(self) -> dict:
+        return param_shapes(self.defs(), jnp.dtype(self.cfg.dtype))
+
+    # ----------------------------------------------------------- forward
+    def _core(self, params, x, *, mode: str, positions, cache):
+        cfg, geom, mesh = self.cfg, self.geom, self.mesh
+        if cfg.family == "ssm":
+            return _ssm_core(params, x, cfg, mode=mode, cache=cache)
+        if cfg.family == "hybrid":
+            return hybrid_lib.hybrid_forward_core(
+                params, x, cfg, geom, mesh, mode=mode, positions=positions,
+                cache=cache)
+        raise ValueError(cfg.family)
+
+    def loss(self, params, batch) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            logits, _, aux = tf_lib.forward(params, batch, cfg, self.geom,
+                                            self.mesh, mode="train")
+        else:
+            x = tf_lib.embed_inputs(params, batch, cfg)
+            positions = jnp.broadcast_to(
+                jnp.arange(x.shape[1])[None, :], x.shape[:2])
+            x, _ = self._core(params, x, mode="train", positions=positions,
+                              cache=None)
+            x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+            logits = tf_lib.output_logits(params, x, cfg)
+            aux = jnp.zeros((), jnp.float32)
+        loss = tf_lib.lm_loss(logits, batch, cfg)
+        total = loss + 0.01 * aux
+        return total, {"lm_loss": loss, "aux_loss": aux}
+
+    def prefill(self, params, batch) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            logits, cache, _ = tf_lib.forward(params, batch, cfg, self.geom,
+                                              self.mesh, mode="prefill")
+            return logits[:, -1:], cache
+        x = tf_lib.embed_inputs(params, batch, cfg)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
+                                     x.shape[:2])
+        x, cache = self._core(params, x, mode="prefill", positions=positions,
+                              cache=None)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = tf_lib.output_logits(params, x[:, -1:], cfg)
+        return logits, cache
+
+    def decode(self, params, cache, batch) -> tuple[jax.Array, dict]:
+        """batch: {"tokens": (B,1)|(B,K,1), "index": scalar int32}."""
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            logits, new_cache, _ = tf_lib.forward(
+                params, batch, cfg, self.geom, self.mesh, mode="decode",
+                cache=cache)
+            return logits, new_cache
+        x = tf_lib.embed_inputs(params, batch, cfg)
+        positions = jnp.broadcast_to(batch["index"], x.shape[:2])
+        cache_in = dict(cache, index=batch["index"])
+        x, new_cache = self._core(params, x, mode="decode",
+                                  positions=positions, cache=cache_in)
+        new_cache.pop("index", None)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = tf_lib.output_logits(params, x, cfg)
+        return logits, new_cache
+
+    # ------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        cfg, geom = self.cfg, self.geom
+        hd = cfg.resolved_head_dim
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            from repro.models.attention import init_kv_cache
+            return init_kv_cache(cfg.num_layers, batch, max_seq,
+                                 geom.kv_heads, hd, cfg.kv_cache_dtype)
+        if cfg.family == "ssm":
+            return ssm_lib.init_ssm_cache(cfg, cfg.num_layers, batch)
+        # hybrid
+        cache = ssm_lib.init_ssm_cache(cfg, cfg.num_layers, batch)
+        n_inv = hybrid_lib.num_attn_invocations(cfg)
+        cache["attn_k"] = jnp.zeros((n_inv, batch, max_seq, geom.kv_heads, hd),
+                                    jnp.dtype(cfg.dtype))
+        cache["attn_v"] = jnp.zeros_like(cache["attn_k"])
+        return cache
+
+    def cache_specs(self, global_batch: Optional[int] = None) -> dict:
+        cfg = self.cfg
+        rules = self.fitted_rules(global_batch)
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            from repro.models.attention import cache_specs
+            return cache_specs(rules, cfg.kv_cache_dtype == "int8")
+        if cfg.family == "ssm":
+            return ssm_lib.ssm_cache_specs(rules)
+        out = ssm_lib.ssm_cache_specs(rules)
+        s = rules.spec(None, "batch", "cache_seq", "kv_heads", "head_dim")
+        out["attn_k"] = s
+        out["attn_v"] = s
+        return out
+
+    # ------------------------------------------------------- input specs
+    def batch_spec(self, global_batch: Optional[int] = None) -> dict:
+        """PartitionSpecs for a training/prefill batch dict."""
+        cfg = self.cfg
+        rules = self.fitted_rules(global_batch)
+        b = rules.spec("batch")
+        bs = rules.spec("batch", None)
+        out = {"tokens": bs, "labels": bs}
+        if cfg.family == "audio" and cfg.num_codebooks > 1:
+            bks = rules.spec("batch", None, None)
+            out = {"tokens": bks, "labels": bks}
+        if cfg.family == "vlm":
+            out["patch_embeds"] = rules.spec("batch", None, None)
+        return out
+
+    def input_specs(self, shape: ShapeConfig, *, with_labels: bool = True) -> dict:
+        """ShapeDtypeStructs for one assigned cell (no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        K = cfg.num_codebooks
+        tok = jnp.int32
+
+        def sds(shp, dt):
+            return jax.ShapeDtypeStruct(shp, dt)
+
+        if shape.kind == "decode":
+            if cfg.family == "audio" and K > 1:
+                batch = {"tokens": sds((B, K, 1), tok)}
+            else:
+                batch = {"tokens": sds((B, 1), tok)}
+            batch["index"] = sds((), tok)
+            return batch
+        if cfg.family == "audio" and K > 1:
+            batch = {"tokens": sds((B, K, S), tok)}
+            if with_labels and shape.kind == "train":
+                batch["labels"] = sds((B, K, S), tok)
+        else:
+            batch = {"tokens": sds((B, S), tok)}
+            if with_labels and shape.kind == "train":
+                batch["labels"] = sds((B, S), tok)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = sds(
+                (B, min(cfg.num_patches, S), cfg.d_model), jnp.bfloat16)
+        return batch
+
+    def dummy_batch(self, key, shape: ShapeConfig) -> dict:
+        """Concrete random batch matching input_specs (for smoke tests)."""
+        specs = self.input_specs(shape)
+        out = {}
+        for name, s in specs.items():
+            key, sub = jax.random.split(key)
+            if name == "index":
+                out[name] = jnp.zeros((), jnp.int32)
+            elif jnp.issubdtype(s.dtype, jnp.integer):
+                out[name] = jax.random.randint(sub, s.shape, 0,
+                                               self.cfg.vocab_size, s.dtype)
+            else:
+                # embedding-scale floats (unit-scale patch embeddings blow
+                # up activation magnitudes and numeric comparisons)
+                out[name] = (jax.random.normal(sub, s.shape, jnp.float32)
+                             * 0.02).astype(s.dtype)
+        return out
+
+
+def _ssm_core(params, x, cfg: ModelConfig, *, mode: str, cache):
+    """Pure-Mamba2 layer stack (train / prefill / decode)."""
+    mp = params["mamba"]
+
+    if mode == "decode":
+        def body(carry, per_layer):
+            x, ssd_st, cx, cb, cc, li = carry
+            lp = per_layer
+            conv_l = tuple(
+                jax.lax.dynamic_index_in_dim(c, li, 0, keepdims=False)
+                for c in (cx, cb, cc))
+            ssd_l = jax.lax.dynamic_index_in_dim(ssd_st, li, 0, keepdims=False)
+            h, (ncv, nssd) = ssm_lib.mamba_mix(
+                rmsnorm(x, lp["ln"], cfg.norm_eps), lp, cfg, mode="decode",
+                conv_state=conv_l, ssd_state=ssd_l)
+            cx, cb, cc = (
+                jax.lax.dynamic_update_slice(c, n.astype(c.dtype)[None],
+                                             (li, 0, 0, 0))
+                for c, n in zip((cx, cb, cc), ncv))
+            ssd_st = jax.lax.dynamic_update_slice(
+                ssd_st, nssd[None].astype(ssd_st.dtype), (li, 0, 0, 0, 0))
+            return (x + h, ssd_st, cx, cb, cc, li + 1), None
+
+        carry0 = (x, cache["ssd"], cache["conv_x"], cache["conv_B"],
+                  cache["conv_C"], jnp.int32(0))
+        (x, ssd_st, cx, cb, cc, _), _ = jax.lax.scan(body, carry0, mp)
+        new_cache = dict(cache, ssd=ssd_st, conv_x=cx, conv_B=cb, conv_C=cc)
+        new_cache.pop("index", None)
+        return x, new_cache
+
+    def body(x, lp):
+        h, (ncv, nssd) = ssm_lib.mamba_mix(rmsnorm(x, lp["ln"], cfg.norm_eps),
+                                           lp, cfg, mode=mode)
+        if mode == "prefill":
+            ys = (ncv[0].astype(x.dtype), ncv[1].astype(x.dtype),
+                  ncv[2].astype(x.dtype), nssd)
+        else:
+            ys = None
+        return x + h, ys
+
+    if mode == "train" and cfg.remat != "nothing":
+        policy = (jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+                  if cfg.remat == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+
+    x, ys = jax.lax.scan(body, x, mp)
+    if mode == "prefill":
+        cx, cb, cc, ssd_st = ys
+        return x, {"conv_x": cx, "conv_B": cb, "conv_C": cc, "ssd": ssd_st}
+    return x, None
+
+
+def build_model(cfg: ModelConfig,
+                mesh: Optional[jax.sharding.Mesh] = None) -> Model:
+    tp = 1
+    if (mesh is not None and MODEL_AXIS in mesh.axis_names
+            and cfg.sharding_recipe != "dp"):
+        tp = mesh.shape[MODEL_AXIS]
+    return Model(cfg=cfg, geom=Geometry.of(cfg, tp), mesh=mesh)

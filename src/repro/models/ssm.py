@@ -1,0 +1,206 @@
+"""Mamba2 (SSD — state-space duality) blocks, pure JAX reference.
+
+The chunked SSD algorithm [arXiv:2405.21060]: sequence is split into
+chunks; intra-chunk term is a (masked) quadratic attention-like matmul,
+inter-chunk term is a linear recurrence over per-chunk states.  This
+module is the HOST/oracle path; ``repro.kernels.ssd_scan`` is the ACCEL
+Pallas kernel implementing the same tiling in VMEM.
+
+Decode is the O(1)-state recurrent form: the "KV cache" is a constant
+size (conv_state, ssd_state) pair — which is why the long_500k cell is
+runnable for SSM/hybrid archs only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.model_config import ModelConfig
+from repro.models.common import ParamDef, rmsnorm
+
+
+def ssm_defs(cfg: ModelConfig, num_layers: int | None = None) -> dict:
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    L = num_layers if num_layers is not None else cfg.num_layers
+    ck = cfg.conv_kernel
+    return {
+        "in_z": ParamDef((L, d, di), ("layers", "embed", "ssm_inner"), "scaled"),
+        "in_x": ParamDef((L, d, di), ("layers", "embed", "ssm_inner"), "scaled"),
+        "in_B": ParamDef((L, d, ns), ("layers", "embed", "ssm_state"), "scaled"),
+        "in_C": ParamDef((L, d, ns), ("layers", "embed", "ssm_state"), "scaled"),
+        "in_dt": ParamDef((L, d, nh), ("layers", "embed", "ssm_heads"), "scaled"),
+        "conv_x": ParamDef((L, di, ck), ("layers", "ssm_inner", "conv_kernel"),
+                           "normal", scale=0.3),
+        "conv_B": ParamDef((L, ns, ck), ("layers", "ssm_state", "conv_kernel"),
+                           "normal", scale=0.3),
+        "conv_C": ParamDef((L, ns, ck), ("layers", "ssm_state", "conv_kernel"),
+                           "normal", scale=0.3),
+        "A_log": ParamDef((L, nh), ("layers", "ssm_heads"), "zeros", dtype="float32"),
+        "D": ParamDef((L, nh), ("layers", "ssm_heads"), "ones", dtype="float32"),
+        "dt_bias": ParamDef((L, nh), ("layers", "ssm_heads"), "zeros",
+                            dtype="float32"),
+        "gate_norm": ParamDef((L, di), ("layers", "ssm_inner"), "ones",
+                              dtype="float32"),
+        "out": ParamDef((L, di, d), ("layers", "ssm_inner", "embed"), "scaled"),
+        "ln": ParamDef((L, d), ("layers", "embed"), "ones", dtype="float32"),
+    }
+
+
+def causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv.  x: (B,S,C), w: (C,K).
+
+    With ``state`` ((B, C, K-1) trailing inputs) performs the streaming
+    update for decode; returns (y, new_state).
+    """
+    B, S, C = x.shape
+    K = w.shape[-1]
+    if state is None:
+        pad = jnp.zeros((B, K - 1, C), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)          # (B, S+K-1, C)
+        new_state = jnp.moveaxis(xp[:, -(K - 1):, :], 1, 2) if K > 1 else None
+    else:
+        xp = jnp.concatenate([jnp.moveaxis(state, 1, 2).astype(x.dtype), x],
+                             axis=1)
+        new_state = jnp.moveaxis(xp[:, -(K - 1):, :], 1, 2)
+    idx = jnp.arange(S)[:, None] + jnp.arange(K)[None, :]
+    windows = xp[:, idx, :]                             # (B, S, K, C)
+    y = jnp.einsum("bskc,ck->bsc", windows, w.astype(x.dtype))
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., l, h) -> (..., h, l, l) lower-tri pairwise sums of a."""
+    l = a.shape[-2]
+    a = jnp.moveaxis(a, -1, -2)                         # (..., h, l)
+    cs = jnp.cumsum(a, axis=-1)
+    # L[i, j] = sum over (j, i] of a  (decay applied strictly after step j)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """Chunked SSD scan (reference oracle).
+
+    x:  (B, S, H, P)   dt-discretised below
+    dt: (B, S, H)      positive step sizes
+    A:  (H,)           negative decay rates
+    Bm: (B, S, N), Cm: (B, S, N)   (ngroups=1, broadcast over heads)
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    Bsz, S, H, Pdim = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    xd = (x * dt[..., None]).astype(jnp.float32)
+    a = (A[None, None, :] * dt).astype(jnp.float32)     # (B,S,H) log-decay
+
+    xc = xd.reshape(Bsz, nc, chunk, H, Pdim)
+    ac = a.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+
+    # 1) intra-chunk (quadratic within chunk)
+    Lmat = jnp.exp(_segsum(ac))                         # (B,nc,H,l,l)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)      # (B,nc,l,l)
+    Y_diag = jnp.einsum("bchls,bcls,bcshp->bclhp", Lmat, scores, xc)
+
+    # 2) per-chunk states
+    a_cum = jnp.cumsum(ac, axis=2)                      # (B,nc,l,H)
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (B,nc,l,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_states, xc)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])           # (B,nc,H)
+    s0 = (jnp.zeros((Bsz, H, Pdim, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s_prev, inp):
+        dec, st = inp
+        s = s_prev * dec[:, :, None, None] + st
+        return s, s_prev
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B,nc,H,P,N)
+
+    # 4) state -> output contribution
+    state_decay = jnp.exp(a_cum)                        # (B,nc,l,H)
+    Y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states, state_decay)
+
+    y = (Y_diag + Y_off).reshape(Bsz, S, H, Pdim)
+    return y.astype(x.dtype), final
+
+
+def ssd_recurrent_step(state, x_t, dt_t, A, B_t, C_t):
+    """One decode step.  state: (B,H,P,N); x_t: (B,H,P); dt_t: (B,H);
+    B_t, C_t: (B,N).  Returns (y_t, new_state)."""
+    a = jnp.exp(A[None, :] * dt_t).astype(jnp.float32)          # (B,H)
+    xd = (x_t * dt_t[..., None]).astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn->bhpn", xd, B_t.astype(jnp.float32))
+    new_state = state * a[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new_state
+
+
+def mamba_mix(x, lp, cfg: ModelConfig, *, mode: str, conv_state=None,
+              ssd_state=None):
+    """Full Mamba2 mixer.  x: (B,S,d) -> (y, (conv_state, ssd_state))."""
+    B, S, d = x.shape
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+
+    z = jnp.einsum("bsd,de->bse", x, lp["in_z"])
+    xs = jnp.einsum("bsd,de->bse", x, lp["in_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, lp["in_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, lp["in_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, lp["in_dt"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+
+    if mode == "decode":
+        cs_x, cs_B, cs_C = conv_state
+        xs, ncs_x = causal_conv(xs, lp["conv_x"], cs_x)
+        Bm, ncs_B = causal_conv(Bm, lp["conv_B"], cs_B)
+        Cm, ncs_C = causal_conv(Cm, lp["conv_C"], cs_C)
+        new_conv = (ncs_x, ncs_B, ncs_C)
+    else:
+        xs, ncs_x = causal_conv(xs, lp["conv_x"])
+        Bm, ncs_B = causal_conv(Bm, lp["conv_B"])
+        Cm, ncs_C = causal_conv(Cm, lp["conv_C"])
+        new_conv = (ncs_x, ncs_B, ncs_C)
+
+    A = -jnp.exp(lp["A_log"])                            # (nh,)
+    xh = xs.reshape(B, S, nh, hd)
+
+    if mode == "decode":
+        y, new_state = ssd_recurrent_step(
+            ssd_state, xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0])
+        y = y[:, None]                                   # (B,1,nh,hd)
+    else:
+        y, new_state = ssd_chunked(xh, dt, A, Bm, Cm,
+                                   chunk=min(cfg.ssm_chunk, S))
+
+    y = y + xh.astype(jnp.float32) * lp["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, lp["out"])
+    return out, (new_conv, new_state)
+
+
+def init_ssm_cache(cfg: ModelConfig, num_layers: int, batch: int) -> dict:
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    k = cfg.conv_kernel - 1
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "conv_x": jnp.zeros((num_layers, batch, di, k), dt),
+        "conv_B": jnp.zeros((num_layers, batch, ns, k), dt),
+        "conv_C": jnp.zeros((num_layers, batch, ns, k), dt),
+        "ssd": jnp.zeros((num_layers, batch, nh, hd, ns), jnp.float32),
+    }
+
+
+def ssm_cache_specs(rules) -> dict:
+    return {
+        "conv_x": rules.spec("layers", "batch", "ssm_inner", None),
+        "conv_B": rules.spec("layers", "batch", "ssm_state", None),
+        "conv_C": rules.spec("layers", "batch", "ssm_state", None),
+        "ssd": rules.spec("layers", "batch", "ssm_heads", None, None),
+    }

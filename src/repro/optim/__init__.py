@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, OptState, cosine_schedule
+from repro.optim.compression import compress_int8_ef, decompress_int8

@@ -1,0 +1,104 @@
+"""AdamW from scratch (no optax) with fp32 moments and ZeRO-1 sharding.
+
+Moments live in fp32 regardless of param dtype.  With ``zero1`` the
+moment PartitionSpecs additionally shard the largest divisible dim over
+the ``data`` axis — XLA then turns the DP grad all-reduce into
+reduce-scatter + (param) all-gather, the ZeRO-1 communication pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.model_config import TrainConfig
+from repro.parallel.mesh import DATA_AXIS
+
+
+@dataclasses.dataclass
+class AdamW:
+    cfg: TrainConfig
+
+    def init(self, params: Any) -> dict:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: Any, state: dict, params: Any,
+               lr: jax.Array) -> tuple[Any, dict]:
+        c = self.cfg
+        step = state["step"] + 1
+        b1, b2 = c.beta1, c.beta2
+
+        # global-norm clip in fp32
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + 1e-8)
+            if c.weight_decay and p.ndim >= 2:   # no decay on norms/scalars
+                delta = delta + c.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, m, v
+
+        flat_g, tree = jax.tree.flatten(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        flat_p = jax.tree.leaves(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree.unflatten(tree, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tree, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tree, [o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step,
+                       "gnorm": gnorm}
+
+    # --------------------------------------------------------- shardings
+    def state_specs(self, param_specs: Any, param_shapes: Any,
+                    dp_size: int) -> dict:
+        """Moment specs: param spec (+ ZeRO-1 data-axis sharding)."""
+        def zspec(spec: P, shape) -> P:
+            if not self.cfg.zero1 or dp_size <= 1:
+                return spec
+            parts = list(spec) + [None] * (len(shape.shape) - len(spec))
+            for i, (dim, cur) in enumerate(zip(shape.shape, parts)):
+                if cur is None and dim % dp_size == 0 and dim >= dp_size:
+                    parts[i] = DATA_AXIS
+                    return P(*parts)
+            return spec
+
+        return {
+            "m": jax.tree.map(zspec, param_specs, param_shapes),
+            "v": jax.tree.map(zspec, param_specs, param_shapes),
+            "step": P(),
+        }
+
+
+OptState = dict
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

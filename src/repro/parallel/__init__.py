@@ -1,0 +1,9 @@
+"""Distribution layer: mesh construction, logical-axis sharding rules."""
+from repro.parallel.mesh import MeshSpec, make_mesh, batch_axes, model_axis
+from repro.parallel.sharding import (
+    ShardingRules,
+    DEFAULT_RULES,
+    spec_for,
+    pad_to_multiple,
+    padded_size,
+)

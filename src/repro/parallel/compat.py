@@ -1,0 +1,25 @@
+"""Small JAX-version compatibility shims."""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def use_mesh(mesh):
+    """Context manager putting ``mesh`` in scope (None -> no-op)."""
+    if mesh is None:
+        return contextlib.nullcontext()
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return jax.sharding.set_mesh(mesh)     # jax>=0.8: dual global/ctx-manager
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with GSPMD-auto axis types (silences the 0.9 change)."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except TypeError:  # older jax without axis_types
+        return jax.make_mesh(shape, axes)

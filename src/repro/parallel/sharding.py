@@ -1,0 +1,105 @@
+"""Logical-axis sharding rules.
+
+Every model parameter / activation dimension carries a *logical* name
+("batch", "vocab", "heads", ...).  ``spec_for`` maps a tuple of logical
+names to a ``PartitionSpec`` through a rules table, so the whole sharding
+layout of the framework is one dictionary that the perf loop can rewrite.
+
+Divisibility helpers implement the Megatron-style padding used for
+awkward head/vocab counts (qwen 40 heads, smollm 9/15 heads, granite
+vocab 49155): dimensions are padded up to a multiple of the shard count,
+padded slices are zero-initialised and contribute exactly zero to the
+forward/backward (masked at init; see models/common.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+
+# Logical dimension names -> mesh axes (None = replicated).
+# "batch" shards over both the pod and data axes (pure DP across pods).
+DEFAULT_RULES: dict[str, object] = {
+    "batch": (POD_AXIS, DATA_AXIS),
+    "seq": None,                  # training activations: seq replicated
+    "cache_seq": MODEL_AXIS,      # KV cache sequence dim: sharded over TP
+    "embed": None,                # residual stream replicated across TP
+    "vocab": MODEL_AXIS,
+    "heads": MODEL_AXIS,          # query heads (padded to a multiple of TP)
+    "kv_heads": None,             # default replicate; set per-arch if divisible
+    "head_dim": None,
+    "mlp": MODEL_AXIS,            # d_ff
+    "experts": MODEL_AXIS,        # expert parallelism
+    "expert_mlp": None,           # per-expert d_ff (already split by EP)
+    "layers": None,               # scan-stacked layer dim
+    "ssm_inner": MODEL_AXIS,      # mamba d_inner
+    "ssm_heads": MODEL_AXIS,
+    "ssm_state": None,
+    "conv_kernel": None,
+    "codebooks": None,
+    "zero1": DATA_AXIS,           # optimizer-state extra sharding (ZeRO-1)
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    rules: dict[str, object]
+
+    def spec(self, *logical: str | None) -> P:
+        parts = []
+        for name in logical:
+            if name is None:
+                parts.append(None)
+            else:
+                parts.append(self.rules.get(name))
+        return P(*parts)
+
+
+def spec_for(*logical: str | None, rules: dict | None = None) -> P:
+    return ShardingRules(rules or DEFAULT_RULES).spec(*logical)
+
+
+def prune_spec(spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes that don't exist in ``mesh`` (e.g. 'pod' on a
+    single-pod mesh) so one rules table serves every topology."""
+    names = set(mesh.axis_names)
+    parts = []
+    for p in spec:
+        if p is None:
+            parts.append(None)
+        elif isinstance(p, tuple):
+            kept = tuple(a for a in p if a in names)
+            parts.append(kept if kept else None)
+        else:
+            parts.append(p if p in names else None)
+    return P(*parts)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, prune_spec(spec, mesh))
+
+
+def named_tree(mesh: Mesh, tree):
+    """Pytree of PartitionSpecs -> pytree of (pruned) NamedShardings."""
+    import jax
+
+    return jax.tree.map(lambda s: named(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def pad_to_multiple(value: int, multiple: int) -> int:
+    """Round ``value`` up to a multiple of ``multiple``."""
+    if multiple <= 1:
+        return value
+    return ((value + multiple - 1) // multiple) * multiple
+
+
+def padded_size(value: int, shards: int) -> int:
+    """Shard-divisible size for ``value`` over ``shards`` shards."""
+    return pad_to_multiple(value, shards)
+
+
+def divisible(value: int, shards: int) -> bool:
+    return shards >= 1 and value % shards == 0

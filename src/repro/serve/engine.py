@@ -1,0 +1,115 @@
+"""Batched serving engine: prefill + decode with a managed KV cache.
+
+The decode step is greedy (argmax) over the batch; generation runs
+position-synchronised (all requests share the prompt length after left
+padding is applied by the caller — a continuous-batching scheduler is a
+further production feature, out of the paper's scope).
+
+Xar-Trek integration: ``ServeEngine`` can dispatch its prefill/decode
+steps through an XarTrekRuntime so the scheduler migrates them between
+targets as load changes (the Figure-6 throughput experiment's analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.model_config import ModelConfig
+from repro.core.runtime import XarTrekRuntime
+from repro.models.model import Model, build_model
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray            # (B, n_generated)
+    prefill_ms: float
+    decode_ms: float
+
+    @property
+    def tokens_per_second(self) -> float:
+        n = self.tokens.shape[0] * self.tokens.shape[1]
+        return n / max((self.prefill_ms + self.decode_ms) / 1e3, 1e-9)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 params=None, seed: int = 0,
+                 runtime: Optional[XarTrekRuntime] = None):
+        self.cfg = cfg
+        self.model = build_model(cfg, mesh)
+        self.mesh = mesh
+        self.runtime = runtime
+        if params is None:
+            params = self.model.init(jax.random.PRNGKey(seed))
+        self.params = params
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode)
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        """Greedy over the last position.  logits: (B,1,V) or (B,1,K,V)."""
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: jax.Array, max_new_tokens: int = 16,
+                 patch_embeds: Optional[jax.Array] = None
+                 ) -> GenerationResult:
+        """prompts: (B, S) int32 (or (B, K, S) for audio)."""
+        cfg = self.cfg
+        audio = cfg.family == "audio" and cfg.num_codebooks > 1
+        B = prompts.shape[0]
+        S = prompts.shape[-1]
+        max_seq = S + max_new_tokens
+
+        batch = {"tokens": prompts}
+        if patch_embeds is not None:
+            batch["patch_embeds"] = patch_embeds
+
+        t0 = time.perf_counter()
+        if self.runtime is not None and "serve_prefill" in self.runtime.binaries:
+            logits, cache = self.runtime.call("serve_prefill", self.params,
+                                              batch)
+        else:
+            logits, cache = self._prefill(self.params, batch)
+        logits = jax.block_until_ready(logits)
+        prefill_ms = (time.perf_counter() - t0) * 1e3
+
+        # grow the cache to max_seq (prefill cache covers the prompt only)
+        cache = self._grow_cache(cache, B, max_seq, S)
+
+        out_tokens = []
+        t0 = time.perf_counter()
+        tok = self._sample(logits[:, -1:])               # (B,1) or (B,1,K)
+        for i in range(max_new_tokens):
+            out_tokens.append(np.asarray(tok).reshape(B, -1))
+            dec_batch = {
+                "tokens": (jnp.moveaxis(tok, -1, 1) if audio else tok),
+                "index": jnp.int32(S + i),
+            }
+            if self.runtime is not None and "serve_decode" in self.runtime.binaries:
+                logits, cache = self.runtime.call("serve_decode", self.params,
+                                                  cache, dec_batch)
+            else:
+                logits, cache = self._decode(self.params, cache, dec_batch)
+            tok = self._sample(logits[:, -1:])
+        jax.block_until_ready(tok)
+        decode_ms = (time.perf_counter() - t0) * 1e3
+        return GenerationResult(np.stack(out_tokens, axis=1).squeeze(-1)
+                                if not audio else np.stack(out_tokens, 1),
+                                prefill_ms, decode_ms)
+
+    def _grow_cache(self, cache: dict, batch: int, max_seq: int,
+                    prompt_len: int) -> dict:
+        full = self.model.init_cache(batch, max_seq)
+        for k in full:
+            if k in ("k", "v", "k_scale", "v_scale", "attn_k", "attn_v"):
+                full[k] = jax.lax.dynamic_update_slice(
+                    full[k], cache[k].astype(full[k].dtype),
+                    (0,) * full[k].ndim)
+            else:
+                full[k] = cache[k].astype(full[k].dtype)
+        return full

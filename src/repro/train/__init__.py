@@ -1,0 +1,2 @@
+from repro.train.step import make_train_step, init_train_state
+from repro.train.trainer import Trainer, FailureInjector, SimulatedFailure

@@ -1,0 +1,133 @@
+"""Train step: grad-accum microbatching + AdamW, jitted with shardings.
+
+The microbatch loop is a lax.scan with fp32 grad accumulators; XLA
+overlaps each microbatch's DP reduce with the next microbatch's compute
+(latency-hiding scheduler).  Optional int8+error-feedback compression of
+the cross-pod reduction runs in a partially-manual shard_map over the
+``pod`` axis (see optim/compression.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.model_config import TrainConfig
+from repro.models.model import Model
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.parallel.mesh import POD_AXIS
+from repro.parallel.sharding import named_tree
+
+
+def _split_microbatches(batch: dict, n: int, model: Model) -> dict:
+    """Reshape (B, ...) -> (n, B/n, ...) with an explicit sharding
+    constraint: without it GSPMD loses the batch-dim sharding across the
+    reshape and replicates activations (empirically: attention scores
+    blow up 8x and a 500 GB scores all-reduce appears)."""
+    specs = model.batch_spec() if model.mesh is not None else {}
+
+    def split(name, x):
+        x = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+        spec = specs.get(name)
+        if spec is not None:
+            from repro.parallel.sharding import prune_spec
+            full = P(*((None,) + tuple(spec)))
+            x = jax.lax.with_sharding_constraint(
+                x, NamedSharding(model.mesh, prune_spec(full, model.mesh)))
+        return x
+
+    return {k: split(k, v) for k, v in batch.items()}
+
+
+def make_loss_and_grad(model: Model):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+    return jax.value_and_grad(loss_fn, has_aux=True)
+
+
+def make_train_step(model: Model, tcfg: TrainConfig,
+                    total_steps: int = 10_000) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    opt = AdamW(tcfg)
+    schedule = cosine_schedule(tcfg.learning_rate, warmup=min(100, total_steps // 10 + 1),
+                               total=total_steps)
+    grad_fn = make_loss_and_grad(model)
+    n_mb = tcfg.microbatches
+
+    def train_step(params, opt_state, batch):
+        if n_mb > 1:
+            mb = _split_microbatches(batch, n_mb, model)
+
+            def accum(carry, mb_batch):
+                gsum, lsum = carry
+                (loss, metrics), grads = grad_fn(params, mb_batch)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, lsum + loss), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(accum, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / n_mb, gsum)
+            loss = lsum / n_mb
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+
+        lr = schedule(opt_state["step"])
+        new_params, new_state = opt.update(grads, opt_state, params, lr)
+        gnorm = new_state.pop("gnorm")
+        metrics = {"loss": loss.astype(jnp.float32), "lr": lr,
+                   "grad_norm": gnorm}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def train_step_shardings(model: Model, tcfg: TrainConfig, mesh: Mesh):
+    """(in_shardings, out_shardings) for jitting the train step."""
+    opt = AdamW(tcfg)
+    pspecs = model.specs()
+    pshapes = model.shapes()
+    dp = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            dp *= mesh.shape[a]
+    ospecs = opt.state_specs(pspecs, pshapes, dp)
+    bspecs = model.batch_spec()
+
+    ns = lambda tree: named_tree(mesh, tree)
+    in_s = (ns(pspecs), ns(ospecs), ns(bspecs))
+    metric_s = {"loss": NamedSharding(mesh, P()),
+                "lr": NamedSharding(mesh, P()),
+                "grad_norm": NamedSharding(mesh, P())}
+    out_s = (ns(pspecs), ns(ospecs), metric_s)
+    return in_s, out_s
+
+
+def init_train_state(model: Model, tcfg: TrainConfig,
+                     mesh: Optional[Mesh] = None, seed: int = 0):
+    """Sharded init: params + optimizer state materialised directly with
+    their target shardings (no host round-trip)."""
+    opt = AdamW(tcfg)
+    key = jax.random.PRNGKey(seed)
+    if mesh is None:
+        params = model.init(key)
+        return params, opt.init(params)
+    pspecs = model.specs()
+    pshapes = model.shapes()
+    dp = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            dp *= mesh.shape[a]
+    ospecs = opt.state_specs(pspecs, pshapes, dp)
+
+    ns = lambda tree: named_tree(mesh, tree)
+    from repro.parallel.compat import use_mesh
+    with use_mesh(mesh):
+        params = jax.jit(model.init, out_shardings=ns(pspecs))(key)
+        opt_state = jax.jit(opt.init, out_shardings=ns(ospecs))(params)
+    return params, opt_state

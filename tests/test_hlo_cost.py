@@ -1,0 +1,91 @@
+"""The trip-count-aware HLO cost analyzer vs known-flop programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import HloProgram, analyze
+
+D = 128
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+def test_single_matmul_flops():
+    txt = _compile(lambda a, b: a @ b,
+                   jax.ShapeDtypeStruct((D, D), jnp.float32),
+                   jax.ShapeDtypeStruct((D, D), jnp.float32))
+    r = analyze(txt)
+    assert abs(r["flops"] - 2 * D**3) / (2 * D**3) < 0.05
+
+
+@pytest.mark.parametrize("L", [1, 5, 12])
+def test_scan_flops_scale_with_trip_count(L):
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def fn(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+
+    txt = _compile(fn, jax.ShapeDtypeStruct((D, D), jnp.float32),
+                   jax.ShapeDtypeStruct((L, D, D), jnp.float32))
+    r = analyze(txt)
+    expect = 2 * D**3 * L
+    assert abs(r["flops"] - expect) / expect < 0.1, \
+        f"L={L}: {r['flops']:.3e} vs {expect:.3e}"
+
+
+def test_grad_of_scan_flops():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def fn(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+
+    L = 7
+    txt = _compile(jax.grad(fn, argnums=1),
+                   jax.ShapeDtypeStruct((D, D), jnp.float32),
+                   jax.ShapeDtypeStruct((L, D, D), jnp.float32))
+    r = analyze(txt)
+    expect = (2 + 2) * D**3 * L + 2 * D**3 * (L - 1)  # fwd + wgrad + dgrad
+    assert abs(r["flops"] - expect) / expect < 0.15
+
+
+def test_nested_scan_multiplies():
+    def inner(x, w):
+        return x @ w, None
+
+    def outer(x, ws):
+        def step(x, _):
+            y, _ = jax.lax.scan(inner, x, ws)
+            return y, None
+        y, _ = jax.lax.scan(step, x, None, length=3)
+        return jnp.sum(y)
+
+    txt = _compile(outer, jax.ShapeDtypeStruct((D, D), jnp.float32),
+                   jax.ShapeDtypeStruct((4, D, D), jnp.float32))
+    r = analyze(txt)
+    expect = 2 * D**3 * 3 * 4
+    assert abs(r["flops"] - expect) / expect < 0.1
+
+
+def test_parser_handles_wide_tuples():
+    """Tuple types with /*index=N*/ comments must not break op parsing."""
+    def body(carry, w):
+        a, b, c, d, e, f = carry
+        return (a @ w, b, c, d, e, f), None
+
+    def fn(a, ws):
+        init = (a,) * 6
+        out, _ = jax.lax.scan(body, init, ws)
+        return jnp.sum(out[0])
+
+    txt = _compile(fn, jax.ShapeDtypeStruct((D, D), jnp.float32),
+                   jax.ShapeDtypeStruct((5, D, D), jnp.float32))
+    r = analyze(txt)
+    expect = 2 * D**3 * 5
+    assert r["flops"] > expect * 0.9

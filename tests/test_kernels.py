@@ -1,0 +1,220 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (assignment c).
+
+All kernels run in interpret mode on CPU (TPU is the compile target).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as fa_raw
+from repro.kernels.knn_digits import hamming_distances
+from repro.kernels.moe_gmm import grouped_matmul as gmm_raw
+from repro.kernels.rmsnorm import rmsnorm as rms_raw
+from repro.kernels.ssd_scan import ssd_scan as ssd_raw
+
+
+def _key(i=0):
+    return jax.random.PRNGKey(i)
+
+
+# ------------------------------------------------------ flash attention
+
+@pytest.mark.parametrize("B,S,T,H,hd", [
+    (2, 128, 128, 4, 64),
+    (1, 256, 256, 2, 128),
+    (2, 64, 64, 3, 32),       # odd head count, lane-padded hd
+    (1, 512, 512, 1, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(B, S, T, H, hd, dtype):
+    ks = jax.random.split(_key(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, T, H, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, H, hd), jnp.float32).astype(dtype)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    want = ref.attention_ref(qf, kf, vf).reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_gqa_kv_index():
+    """GQA mapping: 4 q heads sharing 2 kv heads."""
+    ks = jax.random.split(_key(2), 3)
+    B, S, H, KV, hd = 2, 64, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    from repro.models.attention import kv_head_index, plain_attention
+    kv_idx = kv_head_index(H, KV, H)
+    out = ops.flash_attention(q, k, v, kv_index=tuple(kv_idx),
+                              block_q=32, block_k=32)
+    want = plain_attention(q, k, v, kv_index=kv_idx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_block_shape_sweep():
+    ks = jax.random.split(_key(3), 3)
+    B, S, hd = 1, 256, 64
+    q = jax.random.normal(ks[0], (B, S, hd))
+    k = jax.random.normal(ks[1], (B, S, hd))
+    v = jax.random.normal(ks[2], (B, S, hd))
+    want = ref.attention_ref(q, k, v)
+    for bq, bk in [(32, 64), (64, 32), (128, 128), (256, 256)]:
+        got = fa_raw(q, k, v, block_q=bq, block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5,
+                                   err_msg=f"block {bq}x{bk}")
+
+
+# --------------------------------------------------------------- SSD
+
+@pytest.mark.parametrize("S,P,N,chunk", [
+    (64, 16, 8, 16), (128, 32, 16, 32), (32, 8, 4, 32),
+])
+def test_ssd_scan_matches_recurrence(S, P, N, chunk):
+    BH = 3
+    ks = jax.random.split(_key(4), 5)
+    x = jax.random.normal(ks[0], (BH, S, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (BH, S)))
+    A = -jnp.exp(jax.random.normal(ks[2], (BH,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (BH, S, N))
+    Cm = jax.random.normal(ks[4], (BH, S, N))
+    y, state = ssd_raw(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    y_ref, state_ref = ref.ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(state_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_model_wrapper_broadcast():
+    """ops.ssd_scan broadcasts B/C over heads like the model does."""
+    B, S, H, P, N = 2, 64, 3, 8, 4
+    ks = jax.random.split(_key(5), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y, state = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=16)
+    from repro.models.ssm import ssd_chunked
+    y_ref, state_ref = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(state_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------- grouped matmul
+
+@pytest.mark.parametrize("E,C,D,F", [(4, 64, 32, 48), (8, 32, 64, 16),
+                                     (2, 128, 16, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul(E, C, D, F, dtype):
+    ks = jax.random.split(_key(6), 3)
+    x = jax.random.normal(ks[0], (E, C, D), jnp.float32).astype(dtype)
+    w = jax.random.normal(ks[1], (E, D, F), jnp.float32).astype(dtype)
+    gs = jax.random.randint(ks[2], (E,), 0, C + 1, jnp.int32)
+    got = gmm_raw(x, w, gs, block_c=32, block_f=16, block_d=16,
+                  interpret=True)
+    want = ref.grouped_matmul_ref(x, w, gs)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# -------------------------------------------------------------- rmsnorm
+
+@pytest.mark.parametrize("R,d", [(8, 64), (128, 96), (6, 128), (1, 32)])
+def test_rmsnorm(R, d):
+    ks = jax.random.split(_key(7), 2)
+    x = jax.random.normal(ks[0], (R, d))
+    w = jax.random.normal(ks[1], (d,))
+    got = ops.rmsnorm(x, w)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------------- knn digits
+
+def test_hamming_distances_exact():
+    ks = jax.random.split(_key(8), 2)
+    t = jax.random.randint(ks[0], (16, 7), 0, 2**31 - 1, jnp.int32).astype(jnp.uint32)
+    r = jax.random.randint(ks[1], (64, 7), 0, 2**31 - 1, jnp.int32).astype(jnp.uint32)
+    got = hamming_distances(t, r, block_t=8, block_n=16, interpret=True)
+    want = ref.hamming_ref(t, r)
+    assert int(jnp.max(jnp.abs(got - want))) == 0
+
+
+def test_knn_digits_recovers_labels():
+    """Clusters of near-identical bitvectors -> KNN must recover labels."""
+    rng = np.random.default_rng(0)
+    protos = rng.integers(0, 2**32, size=(10, 7), dtype=np.uint64).astype(np.uint32)
+    train, labels = [], []
+    for lbl in range(10):
+        for _ in range(20):
+            v = protos[lbl].copy()
+            v[rng.integers(0, 7)] ^= np.uint32(1 << rng.integers(0, 32))
+            train.append(v)
+            labels.append(lbl)
+    train = jnp.asarray(np.stack(train))
+    labels = jnp.asarray(np.asarray(labels, np.int32))
+    test = jnp.asarray(protos)
+    pred = ops.knn_digits(test, train, labels, k=3)
+    assert list(np.asarray(pred)) == list(range(10))
+
+
+# ----------------------------------------------------------- haar window
+
+@pytest.mark.parametrize("H,W,win,stride", [(64, 64, 24, 4), (48, 80, 16, 8),
+                                            (128, 96, 24, 8)])
+def test_window_scores(H, W, win, stride):
+    ks = jax.random.split(_key(9), 2)
+    img = jax.random.normal(ks[0], (H, W))
+    feats = jax.random.normal(ks[1], (5, win * win))
+    got = ops.window_scores(img, feats, win=win, stride=stride)
+    want = ref.window_scores_ref(img, feats, win=win, stride=stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-4)
+
+
+# ------------------------------------------------------------ gqa decode
+
+@pytest.mark.parametrize("Smax,hd,live", [(256, 64, 100), (512, 128, 511),
+                                          (128, 32, 0)])
+def test_gqa_decode_matches_oracle(Smax, hd, live):
+    from repro.kernels.gqa_decode import gqa_decode as gd_raw
+    ks = jax.random.split(_key(10), 3)
+    BH = 6
+    q = jax.random.normal(ks[0], (BH, 1, hd))
+    kc = jax.random.normal(ks[1], (BH, Smax, hd))
+    vc = jax.random.normal(ks[2], (BH, Smax, hd))
+    got = gd_raw(q, kc, vc, jnp.int32(live), block_k=64, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, jnp.int32(live))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_gqa_decode_ops_wrapper_gqa_and_padding():
+    """ops wrapper: GQA head expansion + lane padding (hd=32 -> 128)."""
+    ks = jax.random.split(_key(11), 3)
+    B, Smax, H, KV, hd = 2, 128, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    kc = jax.random.normal(ks[1], (B, Smax, KV, hd))
+    vc = jax.random.normal(ks[2], (B, Smax, KV, hd))
+    from repro.models.attention import decode_attention, kv_head_index
+    kv_idx = kv_head_index(H, KV, H)
+    got = ops.gqa_decode(q, kc, vc, jnp.int32(77), kv_index=tuple(kv_idx),
+                         block_k=32)
+    want = decode_attention(q, kc, vc, jnp.int32(77), kv_index=kv_idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)

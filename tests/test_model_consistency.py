@@ -1,0 +1,111 @@
+"""Decode-path correctness: prefill + token-by-token decode must match the
+teacher-forced forward pass (fp32, lossless caches)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.configs.model_config import ShapeConfig
+from repro.models import transformer as tf_lib
+from repro.models.common import rmsnorm
+from repro.models.model import build_model
+
+S = 32
+
+
+def _teacher_logits(model, cfg, params, batch):
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        logits, _, _ = tf_lib.forward(params, batch, cfg, model.geom, None,
+                                      mode="train")
+        return logits
+    x = tf_lib.embed_inputs(params, batch, cfg)
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], x.shape[:2])
+    x, _ = model._core(params, x, mode="train", positions=pos, cache=None)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return tf_lib.output_logits(params, x, cfg)
+
+
+def _grow(model, cache, B, max_seq):
+    full = model.init_cache(B, max_seq)
+    for k in full:
+        if k in ("attn_k", "attn_v", "k", "v", "k_scale", "v_scale"):
+            full[k] = jax.lax.dynamic_update_slice(
+                full[k], cache[k].astype(full[k].dtype), (0,) * full[k].ndim)
+        else:
+            full[k] = cache[k].astype(full[k].dtype)
+    return full
+
+
+@pytest.mark.parametrize("arch,tol", [
+    ("smollm-135m", 1e-3), ("qwen1.5-32b", 1e-3), ("yi-6b", 5e-3),
+    ("musicgen-medium", 1e-3), ("mamba2-2.7b", 1e-3), ("zamba2-1.2b", 5e-3),
+    ("olmoe-1b-7b", 1e-3), ("pixtral-12b", 5e-3),
+])
+def test_prefill_decode_matches_teacher_forcing(arch, tol, key):
+    cfg = dataclasses.replace(
+        reduced(ARCHS[arch]), dtype="float32", kv_cache_dtype="float32",
+        capacity_factor=16.0)   # high capacity: no MoE token drops
+    model = build_model(cfg, mesh=None)
+    params = model.init(key)
+    batch = model.dummy_batch(key, ShapeConfig("t", S, 2, "train"))
+    batch.pop("labels", None)
+    logits_full = _teacher_logits(model, cfg, params, batch)
+
+    half = S // 2
+    audio = cfg.family == "audio"
+    pre = {"tokens": (batch["tokens"][:, :, :half] if audio
+                      else batch["tokens"][:, :half])}
+    if "patch_embeds" in batch:
+        pre["patch_embeds"] = batch["patch_embeds"][:, :min(cfg.num_patches,
+                                                            half)]
+    lg, cache = jax.jit(model.prefill)(params, pre)
+    err0 = float(jnp.max(jnp.abs(
+        lg.astype(jnp.float32) - logits_full[:, half - 1:half].astype(jnp.float32))))
+    assert err0 < tol, f"prefill logits diverge: {err0}"
+
+    cache = _grow(model, cache, 2, S)
+    dstep = jax.jit(model.decode)
+    worst = 0.0
+    for t in range(half, S):
+        dec = {"tokens": (batch["tokens"][:, :, t:t + 1] if audio
+                          else batch["tokens"][:, t:t + 1]),
+               "index": jnp.int32(t)}
+        lg2, cache = dstep(params, cache, dec)
+        err = float(jnp.max(jnp.abs(
+            lg2.astype(jnp.float32) - logits_full[:, t:t + 1].astype(jnp.float32))))
+        worst = max(worst, err)
+    assert worst < tol, f"decode diverges from teacher forcing: {worst}"
+
+
+def test_int8_cache_close_not_exact(key):
+    """int8 KV is lossy but bounded; fp32 run is the reference."""
+    base = dataclasses.replace(reduced(ARCHS["qwen1.5-32b"]), dtype="float32",
+                               capacity_factor=16.0)
+    outs = {}
+    for cdt in ("float32", "int8"):
+        cfg = dataclasses.replace(base, kv_cache_dtype=cdt)
+        model = build_model(cfg, mesh=None)
+        params = model.init(key)
+        batch = model.dummy_batch(key, ShapeConfig("t", S, 2, "train"))
+        cache = model.init_cache(2, S)
+        dec = {"tokens": batch["tokens"][:, :1], "index": jnp.int32(0)}
+        lg, _ = jax.jit(model.decode)(params, cache, dec)
+        outs[cdt] = lg.astype(jnp.float32)
+    err = float(jnp.max(jnp.abs(outs["int8"] - outs["float32"])))
+    scale = float(jnp.max(jnp.abs(outs["float32"]))) + 1e-9
+    assert err / scale < 0.15, f"int8 cache relative error too large: {err/scale}"
+
+
+def test_vlm_loss_masks_patches(key):
+    cfg = dataclasses.replace(reduced(ARCHS["pixtral-12b"]), dtype="float32")
+    model = build_model(cfg, mesh=None)
+    params = model.init(key)
+    batch = model.dummy_batch(key, ShapeConfig("t", S, 2, "train"))
+    batch["labels"] = batch["tokens"]
+    _, m1 = model.loss(params, batch)
+    # perturbing patch-position labels must not change the loss
+    labels2 = batch["labels"].at[:, :cfg.num_patches].set(0)
+    _, m2 = model.loss(params, dict(batch, labels=labels2))
+    assert abs(float(m1["lm_loss"]) - float(m2["lm_loss"])) < 1e-6

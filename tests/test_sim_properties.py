@@ -1,0 +1,77 @@
+"""Property tests on the platform simulator's invariants."""
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sim import AppProfile, PAPER_APPS, PlatformSim
+from repro.core.targets import TargetKind
+
+APPS = list(PAPER_APPS.values())
+
+
+@given(n_apps=st.integers(1, 12), seed=st.integers(0, 100),
+       policy=st.sampled_from(["always_host", "always_aux", "xartrek"]))
+@settings(max_examples=40, deadline=None)
+def test_all_jobs_complete(n_apps, seed, policy):
+    """Every submitted job finishes; completion time >= isolated time on
+    its chosen target (queueing/contention can only slow things down)."""
+    sim = PlatformSim(policy=policy,
+                      preconfigure=tuple(a.hw_kernel for a in APPS))
+    rng = random.Random(seed)
+    jobs = [sim.submit(rng.choice(APPS), at=rng.uniform(0, 1000))
+            for _ in range(n_apps)]
+    sim.run()
+    assert len(sim.done) == n_apps
+    best_case = {TargetKind.HOST: "x86_ms", TargetKind.AUX: "arm_ms",
+                 TargetKind.ACCEL: "fpga_ms"}
+    for j in jobs:
+        assert j.finish >= j.start - 1e-6
+        iso = getattr(j.app, best_case[j.target])
+        assert j.finish - j.start >= iso - 1e-3, (
+            j.app.name, j.target, j.finish - j.start, iso)
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_host_contention_monotone(seed):
+    """Adding background load never speeds up an always-host app."""
+    rng = random.Random(seed)
+    app = rng.choice(APPS)
+    times = []
+    for n_bg in (0, 8, 20):
+        sim = PlatformSim(policy="always_host")
+        bg = AppProfile("bg", 30000, 30000, 30000, "K")
+        for _ in range(n_bg):
+            sim.submit(bg, at=0.0, background=True)
+        job = sim.submit(app, at=1.0)
+        sim.run()
+        times.append(job.finish - job.start)
+    assert times[0] <= times[1] + 1e-6 <= times[2] + 2e-6
+
+
+@given(n_apps=st.integers(1, 8), seed=st.integers(0, 50))
+@settings(max_examples=30, deadline=None)
+def test_xartrek_never_uses_cold_accel(n_apps, seed):
+    """With an empty bank and no reconfiguration time elapsed, the policy
+    must not send anything to ACCEL before the bank turns hot."""
+    sim = PlatformSim(policy="xartrek", reconfig_ms=1e12)  # never completes
+    rng = random.Random(seed)
+    for _ in range(n_apps):
+        sim.submit(rng.choice(APPS), at=0.0)
+    sim.run()
+    assert sim.decisions[TargetKind.ACCEL] == 0
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=15, deadline=None)
+def test_accel_serialises(seed):
+    """Two simultaneous ACCEL jobs cannot both finish in isolated time."""
+    rng = random.Random(seed)
+    app = rng.choice(APPS)
+    sim = PlatformSim(policy="always_accel",
+                      preconfigure=(app.hw_kernel,))
+    j1 = sim.submit(app, at=0.0)
+    j2 = sim.submit(app, at=0.0)
+    sim.run()
+    d1, d2 = j1.finish - j1.start, j2.finish - j2.start
+    assert max(d1, d2) >= 2 * app.fpga_ms - 1e-3
