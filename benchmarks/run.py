@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.bench_fig10",
     "benchmarks.bench_kernels",
     "benchmarks.bench_roofline",
+    "benchmarks.bench_serve_cb",
 ]
 
 

@@ -1,64 +1,44 @@
-"""Serving with run-time execution migration (the Fig-6 scenario on real
-JAX functions).
+"""Continuous-batching serving with run-time execution migration (the
+Fig-6 scenario on real JAX functions).
 
-A reduced model serves batched generation while synthetic host load
-ramps up.  The decode step is a MigratableFunction with HOST (plain jnp)
-and ACCEL (Pallas-kernel attention for prefill / alternative compiled
-step) variants; the Xar-Trek scheduler watches the load, pre-configures
-the ACCEL variant asynchronously at startup, and migrates when the load
-crosses the threshold.
+A reduced model serves a ragged Poisson arrival stream through the
+``ContinuousBatchingEngine``; every prefill/decode step dispatches
+through the Xar-Trek runtime.  The engine registers HOST and ACCEL
+variants of its step functions; the scheduler watches the synthetic
+host load, pre-configures the ACCEL variant asynchronously at startup,
+and migrates decode steps when the load crosses the threshold.
 
     PYTHONPATH=src python examples/migration_serve.py
 """
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCHS, reduced
-from repro.core.function import FunctionRegistry, MigratableFunction
+from repro.core.function import FunctionRegistry
 from repro.core.runtime import XarTrekRuntime
 from repro.core.targets import TargetKind
-from repro.models.model import build_model
+from repro.serve import ContinuousBatchingEngine, Request
+from repro.serve.scheduler import poisson_arrivals
+
+
+def make_stream(vocab: int, n: int, rate_per_s: float, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    return [Request(rng.randint(0, vocab, size=int(rng.randint(6, 28))),
+                    max_new_tokens=int(rng.randint(4, 16)), arrival_s=t)
+            for t in poisson_arrivals(n, rate_per_s, seed)]
 
 
 def main() -> None:
     cfg = reduced(ARCHS["smollm-135m"])
-    model = build_model(cfg, mesh=None)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
+    rt = XarTrekRuntime(registry=FunctionRegistry(),
+                        min_reconfig_seconds=1.0)
+    engine = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=96,
+                                      runtime=rt, seed=0)
+    # threshold row for the decode step: ACCEL profitable under load
+    row = rt.table.row("cb_decode")
+    row.fpga_thr, row.arm_thr = 2.5, 1e9
 
-    B, S, NEW = 4, 32, 24
-    cache0 = model.init_cache(B, S + NEW)
-
-    def decode_step(params, cache, batch):          # HOST variant
-        return model.decode(params, cache, batch)
-
-    def decode_step_accel(params, cache, batch):    # ACCEL variant
-        # same math; in production this is the Pallas-kernel build of the
-        # step — here it doubles as the "hardware kernel" so the demo
-        # exercises compile/migrate mechanics on CPU
-        return model.decode(params, cache, batch)
-
-    registry = FunctionRegistry()
-    registry.register(MigratableFunction(
-        "serve_decode", "serve-demo",
-        {TargetKind.HOST: decode_step, TargetKind.ACCEL: decode_step_accel}))
-
-    rt = XarTrekRuntime(registry=registry, min_reconfig_seconds=1.0)
-    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
-    logits, cache = jax.jit(model.prefill)(params, {"tokens": prompts})
-    cache = {k: jax.lax.dynamic_update_slice(
-        cache0[k], cache[k].astype(cache0[k].dtype), (0,) * cache0[k].ndim)
-        for k in cache0}
-
-    example = (params, cache, {"tokens": jnp.zeros((B, 1), jnp.int32),
-                               "index": jnp.int32(S)})
-    # app launch: compile HOST now, pre-configure ACCEL in the background
-    rt.prepare("serve_decode", *example,
-               table_row={"fpga_thr": 2.5, "arm_thr": 1e9})
-
-    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
     phases = [("low load", 0), ("high load", 6)]
     for pi, (phase, synthetic_load) in enumerate(phases):
         if pi == 1:
@@ -66,24 +46,21 @@ def main() -> None:
             # (ACCEL compile) completes while traffic is elsewhere —
             # the paper's latency-hiding behaviour
             deadline = time.time() + 10.0
-            while (not rt.bank.is_resident("serve_decode")
+            while (not rt.bank.is_resident("cb_decode")
                    and time.time() < deadline):
                 time.sleep(0.05)
-        # synthetic co-tenants on the host pool
-        for _ in range(synthetic_load):
+        for _ in range(synthetic_load):      # synthetic co-tenants
             rt.monitor.job_started(TargetKind.HOST)
+        mark = len(rt.call_log)
+        reqs = make_stream(cfg.vocab_size, n=12, rate_per_s=30.0, seed=pi)
         t0 = time.perf_counter()
-        targets = []
-        for i in range(NEW // 2):
-            batch = {"tokens": tok, "index": jnp.int32(S + i)}
-            logits, cache = rt.call("serve_decode", params, cache, batch)
-            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)[:, 0]
-            tok = tok[:, None]
-            targets.append(rt.call_log[-1]["target"])
+        out = engine.serve(reqs)
         dt = time.perf_counter() - t0
         for _ in range(synthetic_load):
             rt.monitor.job_finished(TargetKind.HOST)
-        print(f"{phase:10s}: {B * NEW // 2 / dt:7.1f} tok/s  "
+        tokens = sum(len(out[r.req_id]) for r in reqs)
+        targets = [rec["target"] for rec in rt.call_log[mark:]]
+        print(f"{phase:10s}: {tokens / dt:7.1f} tok/s  "
               f"targets={dict((t, targets.count(t)) for t in set(targets))}")
     print("summary:", rt.summary())
 

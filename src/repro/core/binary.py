@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Any, Optional
 
 import jax
@@ -17,6 +18,14 @@ import jax
 from repro.parallel.compat import use_mesh
 from repro.core.function import MigratableFunction
 from repro.core.targets import TargetKind
+
+
+def shape_key(args: tuple) -> tuple:
+    """Hashable (treedef, leaf shapes/dtypes) signature of a call's args.
+    Computed per runtime call, so no stringification — PyTreeDef hashes
+    and compares natively, shapes/dtypes are already hashable."""
+    leaves, treedef = jax.tree.flatten(args)
+    return (treedef, tuple((l.shape, l.dtype) for l in leaves))
 
 
 @dataclasses.dataclass
@@ -36,12 +45,22 @@ class MultiTargetBinary:
 
     def __init__(self, fn: MigratableFunction,
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 donate_argnums: tuple = ()):
+                 donate_argnums: tuple = (),
+                 max_shape_buckets: int = 8):
         self.fn = fn
         self.mesh = mesh
         self.donate_argnums = donate_argnums
         self.variants: dict[TargetKind, CompiledVariant] = {}
         self._jitted: dict[TargetKind, Any] = {}
+        # shape-bucketed recompile cache: continuous batching calls the
+        # same function with varying prefill widths; each shape signature
+        # compiles once and lives in a small per-target LRU (per-target so
+        # migration between kinds can't thrash the other kind's buckets)
+        self.max_shape_buckets = max_shape_buckets
+        self._default_keys: dict[TargetKind, tuple] = {}
+        self._shape_cache: dict[TargetKind,
+                                OrderedDict[tuple, CompiledVariant]] = {}
+        self.shape_stats = {"hits": 0, "misses": 0, "evictions": 0}
 
     def _jit(self, kind: TargetKind):
         if kind not in self._jitted:
@@ -54,19 +73,15 @@ class MultiTargetBinary:
                 fn, donate_argnums=self.donate_argnums, **kw)
         return self._jitted[kind]
 
-    def compile(self, kind: TargetKind, *example_specs) -> CompiledVariant:
-        """Lower + compile one variant (used eagerly at launch for HOST,
-        asynchronously by the KernelBank for ACCEL)."""
-        if kind in self.variants:
-            return self.variants[kind]
+    def _compile_specs(self, kind: TargetKind, specs: tuple) -> CompiledVariant:
         t0 = time.perf_counter()
         jitted = self._jit(kind)
         if self.mesh is not None:
             with use_mesh(self.mesh):
-                lowered = jitted.lower(*example_specs)
+                lowered = jitted.lower(*specs)
                 compiled = lowered.compile()
         else:
-            lowered = jitted.lower(*example_specs)
+            lowered = jitted.lower(*specs)
             compiled = lowered.compile()
         dt = time.perf_counter() - t0
         flops = bytes_acc = 0.0
@@ -76,10 +91,41 @@ class MultiTargetBinary:
             bytes_acc = float(cost.get("bytes accessed", 0.0))
         except Exception:
             pass
-        cv = CompiledVariant(kind=kind, compiled=compiled,
-                             compile_seconds=dt, flops=flops,
-                             bytes_accessed=bytes_acc)
+        return CompiledVariant(kind=kind, compiled=compiled,
+                               compile_seconds=dt, flops=flops,
+                               bytes_accessed=bytes_acc)
+
+    def compile(self, kind: TargetKind, *example_specs) -> CompiledVariant:
+        """Lower + compile one variant (used eagerly at launch for HOST,
+        asynchronously by the KernelBank for ACCEL)."""
+        if kind in self.variants:
+            return self.variants[kind]
+        cv = self._compile_specs(kind, example_specs)
         self.variants[kind] = cv
+        self._default_keys[kind] = shape_key(example_specs)
+        return cv
+
+    def variant_for(self, kind: TargetKind, args: tuple) -> CompiledVariant:
+        """Compiled variant matching ``args``' exact shapes: the eagerly
+        compiled default when the signature matches, else a bounded-LRU
+        shape-bucket recompile (ragged continuous-batching prefills)."""
+        key = shape_key(args)
+        if self._default_keys.get(kind) == key:
+            return self.variants[kind]
+        lru = self._shape_cache.setdefault(kind, OrderedDict())
+        cv = lru.get(key)
+        if cv is not None:
+            lru.move_to_end(key)
+            self.shape_stats["hits"] += 1
+            return cv
+        self.shape_stats["misses"] += 1
+        specs = tuple(jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), a)
+            for a in args)
+        cv = lru[key] = self._compile_specs(kind, specs)
+        while len(lru) > self.max_shape_buckets:
+            lru.popitem(last=False)
+            self.shape_stats["evictions"] += 1
         return cv
 
     def compile_all(self, *example_specs) -> None:

@@ -53,16 +53,19 @@ class XarTrekRuntime:
 
     # ----------------------------------------------------------- prepare
     def prepare(self, fn_name: str, *example_args,
-                table_row: Optional[dict] = None) -> None:
+                table_row: Optional[dict] = None,
+                donate_argnums: tuple = ()) -> None:
         """main()-start instrumentation: compile HOST now, pre-configure
-        ACCEL asynchronously, seed thresholds."""
+        ACCEL asynchronously, seed thresholds.  ``donate_argnums`` lets
+        state-carrying callers (serve decode's KV cache) alias in place."""
         fn = self.registry.get(fn_name)
         fn.check_abi(example_args)
         specs = tuple(jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), a)
             for a in example_args)
         self._specs[fn_name] = example_args
-        binary = MultiTargetBinary(fn, mesh=self.mesh)
+        binary = MultiTargetBinary(fn, mesh=self.mesh,
+                                   donate_argnums=donate_argnums)
         self.binaries[fn_name] = binary
         binary.compile(TargetKind.HOST, *specs)
         if TargetKind.AUX in fn.variants:
@@ -89,7 +92,11 @@ class XarTrekRuntime:
 
     def call(self, fn_name: str, *args,
              state_shardings: Optional[dict] = None) -> Any:
-        """The instrumented call site (steps B + §3.2)."""
+        """The instrumented call site (steps B + §3.2).
+
+        Args may differ in shape from the ``prepare`` examples (ragged
+        continuous-batching prefills): the binary's shape-bucket cache
+        then compiles/reuses a variant for the exact signature."""
         fn = self.registry.get(fn_name)
         binary = self.binaries[fn_name]
         client = self._client(fn.app)
@@ -104,10 +111,15 @@ class XarTrekRuntime:
         if state_shardings and kind in state_shardings:
             args = migrate(args, state_shardings[kind])
 
+        # resolve (and possibly bucket-compile) BEFORE the timed region:
+        # compile time must not reach Algorithm 1 as execution time or
+        # hold the load monitor elevated
+        variant = binary.variant_for(kind, args)
+
         self.monitor.job_started(kind)
         t0 = time.perf_counter()
         try:
-            out = binary.variants[kind](*args)
+            out = variant(*args)
             out = jax.block_until_ready(out)
         finally:
             self.monitor.job_finished(kind)
@@ -125,5 +137,8 @@ class XarTrekRuntime:
             per_target[rec["target"]] += 1
         return {"calls": len(self.call_log), "per_target": per_target,
                 "bank": dict(self.bank.stats),
+                "shape_buckets": {name: dict(b.shape_stats)
+                                  for name, b in self.binaries.items()
+                                  if sum(b.shape_stats.values())},
                 "decisions": {k.value: v
                               for k, v in self.server.decisions.items()}}

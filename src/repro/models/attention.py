@@ -250,7 +250,9 @@ def decode_attention(q, k_cache, v_cache, index: jax.Array,
                      k_new=None, v_new=None) -> jax.Array:
     """Single-token attention over a (possibly seq-sharded) cache.
 
-    q: (B,1,Hp,hd); k_cache/v_cache: (B,Smax,KV,hd).
+    q: (B,1,Hp,hd); k_cache/v_cache: (B,Smax,KV,hd).  ``index`` is a
+    scalar shared position, or (B,1,1,1) ragged per-row positions
+    (continuous batching) — both broadcast against the (…,Smax) masks.
 
     With ``k_new/v_new`` (B,1,KV,hd) given, attends over cache[0,index)
     plus the explicit current token — so callers can READ the old cache

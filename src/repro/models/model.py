@@ -133,8 +133,34 @@ class Model:
         logits = tf_lib.output_logits(params, x[:, -1:], cfg)
         return logits, cache
 
+    def prefill_at(self, params, batch) -> tuple[jax.Array, dict]:
+        """Prefill over right-padded prompts (continuous batching's shape
+        buckets).  batch: {"tokens": (B, S_pad), "length": (B,) int32 real
+        prompt lengths}.  Returns logits at each row's last REAL position
+        (causal masking makes right-padding invisible to positions before
+        it) and the full padded-cache — callers slice [:length) per row.
+        Attention families only (ssm/hybrid state has no per-row seek)."""
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe", "vlm", "audio"):
+            raise NotImplementedError(
+                f"prefill_at: {cfg.family} caches are position-synchronised")
+        fwd = {k: v for k, v in batch.items() if k != "length"}
+        logits, cache, _ = tf_lib.forward(params, fwd, cfg, self.geom,
+                                          self.mesh, mode="prefill")
+        idx = batch["length"].astype(jnp.int32) - 1          # (B,)
+        if cfg.family == "audio" and cfg.num_codebooks > 1:
+            last = jnp.take_along_axis(
+                logits, idx[:, None, None, None], axis=1)    # (B,1,K,V)
+        else:
+            last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)
+        return last, cache
+
     def decode(self, params, cache, batch) -> tuple[jax.Array, dict]:
-        """batch: {"tokens": (B,1)|(B,K,1), "index": scalar int32}."""
+        """batch: {"tokens": (B,1)|(B,K,1), "index": scalar int32}.
+
+        Attention families additionally accept ``index`` as a (B,) int32
+        vector of per-row positions for ragged continuous-batching decode
+        (ssm/hybrid caches remain position-synchronised)."""
         cfg = self.cfg
         if cfg.family in ("dense", "moe", "vlm", "audio"):
             logits, new_cache, _ = tf_lib.forward(

@@ -30,10 +30,7 @@ from repro.parallel.sharding import (
     DEFAULT_RULES, ShardingRules, divisible, padded_size,
 )
 
-try:  # JAX >= 0.6 exposes shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.parallel.compat import shard_map  # noqa: F401  (re-exported)
 
 
 # --------------------------------------------------------------- geometry
@@ -387,6 +384,19 @@ def lm_loss(logits, batch, cfg: ModelConfig) -> jax.Array:
 
 # ------------------------------------------------------------- full model
 
+def _write_kv_layer(stack, new, li, cache_index):
+    """Write ``new`` (B,1,KV,hd-or-1) into layer ``li`` of a cache stack
+    (L,B,Smax,KV,hd-or-1) at ``cache_index``: a shared scalar position, or
+    a (B,) vector of ragged per-row positions (continuous batching)."""
+    if cache_index.ndim:
+        return jax.vmap(
+            lambda c, n, i: jax.lax.dynamic_update_slice(
+                c, n[None].astype(c.dtype), (li, i, 0, 0)),
+            in_axes=(1, 0, 0), out_axes=1)(stack, new, cache_index)
+    return jax.lax.dynamic_update_slice(
+        stack, new.astype(stack.dtype)[None], (li, 0, cache_index, 0, 0))
+
+
 def forward(params, batch, cfg: ModelConfig, geom: Geometry, mesh, *,
             mode: str, cache: dict | None = None):
     """mode: train | prefill | decode.
@@ -396,7 +406,11 @@ def forward(params, batch, cfg: ModelConfig, geom: Geometry, mesh, *,
     x = embed_inputs(params, batch, cfg)
     B, S = x.shape[0], x.shape[1]
     if mode == "decode":
-        positions = jnp.broadcast_to(batch["index"], (B, S))
+        # index: scalar () for position-synchronised decode, or (B,) for
+        # ragged continuous-batching decode (each row at its own position)
+        idx = batch["index"]
+        positions = jnp.broadcast_to(
+            idx[:, None] if idx.ndim else idx, (B, S))
     else:
         positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
 
@@ -405,6 +419,9 @@ def forward(params, batch, cfg: ModelConfig, geom: Geometry, mesh, *,
     if mode == "decode":
         cache_index = batch["index"]
         kv_idx = kv_index_for(cfg, geom)
+
+        attn_index = (cache_index[:, None, None, None] if cache_index.ndim
+                      else cache_index)
 
         def body(carry, lp):
             x, ck, cv, li, aux = carry
@@ -416,12 +433,10 @@ def forward(params, batch, cfg: ModelConfig, geom: Geometry, mesh, *,
             kc = jax.lax.dynamic_index_in_dim(ck, li, 0, keepdims=False)
             vc = jax.lax.dynamic_index_in_dim(cv, li, 0, keepdims=False)
             out = attn_lib.decode_attention(
-                q, kc.astype(x.dtype), vc.astype(x.dtype), cache_index,
+                q, kc.astype(x.dtype), vc.astype(x.dtype), attn_index,
                 kv_index=kv_idx, k_new=k, v_new=v)
-            ck = jax.lax.dynamic_update_slice(
-                ck, k.astype(ck.dtype)[None], (li, 0, cache_index, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cv, v.astype(cv.dtype)[None], (li, 0, cache_index, 0, 0))
+            ck = _write_kv_layer(ck, k, li, cache_index)
+            cv = _write_kv_layer(cv, v, li, cache_index)
             x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
             if cfg.family == "moe":
                 h, a = moe_block(rmsnorm(x, lp["ln2"], cfg.norm_eps), lp,
@@ -475,6 +490,8 @@ def _forward_decode_int8(params, batch, cfg, geom, mesh, cache, x, positions):
     cache_index = batch["index"]
     kv_idx = kv_index_for(cfg, geom)
     from repro.models.common import dequantize_int8, quantize_int8
+    attn_index = (cache_index[:, None, None, None] if cache_index.ndim
+                  else cache_index)
 
     def body(carry, lp):
         x, ck, cv, ks, vs, li, aux = carry
@@ -487,14 +504,14 @@ def _forward_decode_int8(params, batch, cfg, geom, mesh, cache, x, positions):
         vc = dequantize_int8(
             jax.lax.dynamic_index_in_dim(cv, li, 0, keepdims=False),
             jax.lax.dynamic_index_in_dim(vs, li, 0, keepdims=False), x.dtype)
-        out = attn_lib.decode_attention(q, kc, vc, cache_index,
+        out = attn_lib.decode_attention(q, kc, vc, attn_index,
                                         kv_index=kv_idx, k_new=k, v_new=v)
         kq, ksc = quantize_int8(k, axis=-1)
         vq, vsc = quantize_int8(v, axis=-1)
-        ck = jax.lax.dynamic_update_slice(ck, kq[None], (li, 0, cache_index, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, vq[None], (li, 0, cache_index, 0, 0))
-        ks = jax.lax.dynamic_update_slice(ks, ksc[None], (li, 0, cache_index, 0, 0))
-        vs = jax.lax.dynamic_update_slice(vs, vsc[None], (li, 0, cache_index, 0, 0))
+        ck = _write_kv_layer(ck, kq, li, cache_index)
+        cv = _write_kv_layer(cv, vq, li, cache_index)
+        ks = _write_kv_layer(ks, ksc, li, cache_index)
+        vs = _write_kv_layer(vs, vsc, li, cache_index)
         x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
         if cfg.family == "moe":
             h, a = moe_block(rmsnorm(x, lp["ln2"], cfg.norm_eps), lp, cfg, mesh)

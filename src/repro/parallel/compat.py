@@ -1,9 +1,30 @@
-"""Small JAX-version compatibility shims."""
+"""Small JAX-version compatibility shims.
+
+The repo supports jax 0.4.x (no ``AxisType``, no top-level ``shard_map``,
+``Mesh`` is its own context manager) through jax 0.9 (GSPMD-auto axis
+types, ``jax.sharding.use_mesh`` / ``set_mesh``, ``check_vma``).
+"""
 from __future__ import annotations
 
 import contextlib
+import inspect
 
 import jax
+
+try:  # JAX >= 0.6 exposes shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover — version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# jax >= 0.7 renamed check_rep -> check_vma
+_SHARD_MAP_PARAMS = set(inspect.signature(_shard_map).parameters)
+_REP_KW = "check_vma" if "check_vma" in _SHARD_MAP_PARAMS else "check_rep"
+
+
+def shard_map(fn, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-portable shard_map (maps ``check_vma`` to old ``check_rep``)."""
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_REP_KW: check_vma})
 
 
 def use_mesh(mesh):
@@ -12,14 +33,28 @@ def use_mesh(mesh):
         return contextlib.nullcontext()
     if hasattr(jax.sharding, "use_mesh"):
         return jax.sharding.use_mesh(mesh)
-    return jax.sharding.set_mesh(mesh)     # jax>=0.8: dual global/ctx-manager
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)  # jax>=0.8: dual global/ctx-manager
+    return mesh                     # jax<=0.5: Mesh is a context manager
+
+
+def peak_memory_bytes(mem) -> int:
+    """Peak bytes from a CompiledMemoryStats; jax<0.5 has no
+    ``peak_memory_in_bytes`` field, so approximate it from the parts."""
+    peak = getattr(mem, "peak_memory_in_bytes", 0)
+    if peak:
+        return peak
+    return (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
 
 
 def make_mesh(shape, axes):
     """jax.make_mesh with GSPMD-auto axis types (silences the 0.9 change)."""
-    try:
-        return jax.make_mesh(
-            shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    except TypeError:  # older jax without axis_types
-        return jax.make_mesh(shape, axes)
+    if hasattr(jax.sharding, "AxisType"):
+        try:
+            return jax.make_mesh(
+                shape, axes,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        except TypeError:  # jax with AxisType but no axis_types kwarg
+            pass
+    return jax.make_mesh(shape, axes)

@@ -1,1 +1,5 @@
-from repro.serve.engine import ServeEngine, GenerationResult
+from repro.serve.batch import Slot, SlotManager
+from repro.serve.engine import (
+    ContinuousBatchingEngine, GenerationResult, ServeEngine, prompt_bucket,
+)
+from repro.serve.scheduler import Request, RequestQueue, poisson_arrivals

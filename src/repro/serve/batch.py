@@ -1,0 +1,102 @@
+"""Per-request KV-cache slot management for continuous batching.
+
+The engine owns one batched KV cache of fixed width ``max_slots`` (the
+decode batch) and length ``max_seq``.  Each in-flight request occupies
+one row ("slot"): admission writes its prefilled KV into the row,
+decode steps advance the row's position independently of its
+neighbours, and completion frees the row for the next arrival.
+
+Stale KV beyond a slot's current position is never cleared: decode is
+write-then-attend (the new token's KV lands at ``pos`` before any later
+step reads it) and attention masks positions beyond ``pos``, so a fresh
+request only ever reads positions its own prefill/decode wrote.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.scheduler import Request
+
+
+@dataclasses.dataclass
+class Slot:
+    """One occupied row of the batched KV cache."""
+
+    index: int                 # row in the batched cache
+    request: Request
+    pos: int                   # next cache write position (= tokens cached)
+    last_token: int            # token to feed at the next decode step
+    tokens: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.request.max_new_tokens
+
+
+class SlotManager:
+    """Free-list of cache rows + the per-step index/token vectors."""
+
+    def __init__(self, max_slots: int, max_seq: int):
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self._free: list[int] = list(range(max_slots))[::-1]  # pop() -> 0 first
+        self.active: dict[int, Slot] = {}
+        self.stats = {"admitted": 0, "released": 0, "peak_active": 0}
+        self.slot_uses = [0] * max_slots
+
+    def has_free(self) -> bool:
+        return bool(self._free)
+
+    def validate(self, request: Request) -> Request:
+        """Reject a request that cannot fit one cache row (the engine
+        calls this at submission so callers fail fast, before a prefill
+        or a slot is spent on it)."""
+        if request.prompt_len + request.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request {request.req_id} needs "
+                f"{request.prompt_len + request.max_new_tokens} positions, "
+                f"cache rows hold {self.max_seq}")
+        return request
+
+    def admit(self, request: Request, first_token: int) -> Slot:
+        """Claim a row for ``request`` whose prefill emitted ``first_token``."""
+        if not self._free:
+            raise RuntimeError("no free slot")
+        self.validate(request)
+        idx = self._free.pop()
+        slot = Slot(index=idx, request=request, pos=request.prompt_len,
+                    last_token=first_token, tokens=[first_token])
+        self.active[idx] = slot
+        self.slot_uses[idx] += 1
+        self.stats["admitted"] += 1
+        self.stats["peak_active"] = max(self.stats["peak_active"],
+                                        len(self.active))
+        return slot
+
+    def release(self, slot: Slot) -> None:
+        del self.active[slot.index]
+        self._free.append(slot.index)
+        self.stats["released"] += 1
+
+    # ------------------------------------------------- per-step vectors
+    def token_vector(self) -> np.ndarray:
+        """(max_slots, 1) int32: each active slot's pending token."""
+        toks = np.zeros((self.max_slots, 1), np.int32)
+        for idx, slot in self.active.items():
+            toks[idx, 0] = slot.last_token
+        return toks
+
+    def index_vector(self) -> np.ndarray:
+        """(max_slots,) int32 per-row cache positions.  Inactive rows pin
+        to 0: their junk write lands below any future request's prefill,
+        which overwrites it (see module docstring)."""
+        idx = np.zeros((self.max_slots,), np.int32)
+        for i, slot in self.active.items():
+            idx[i] = slot.pos
+        return idx
+
+    def active_slots(self) -> list[Slot]:
+        return [self.active[i] for i in sorted(self.active)]

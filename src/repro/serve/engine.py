@@ -1,27 +1,38 @@
-"""Batched serving engine: prefill + decode with a managed KV cache.
+"""Serving engines: synchronous batch and continuous batching.
 
-The decode step is greedy (argmax) over the batch; generation runs
-position-synchronised (all requests share the prompt length after left
-padding is applied by the caller — a continuous-batching scheduler is a
-further production feature, out of the paper's scope).
+``ServeEngine`` is the position-synchronised baseline: one batch of
+equal-length (caller-left-padded) prompts runs prefill + max_new_tokens
+decode steps in lockstep.
 
-Xar-Trek integration: ``ServeEngine`` can dispatch its prefill/decode
-steps through an XarTrekRuntime so the scheduler migrates them between
-targets as load changes (the Figure-6 throughput experiment's analogue).
+``ContinuousBatchingEngine`` serves a ragged arrival stream: requests
+are admitted at arbitrary times into per-request KV-cache slots,
+prefill of new arrivals interleaves with decode of in-flight ones, and
+finished slots are evicted and reused immediately (no head-of-line
+blocking on batch formation or on the batch's slowest request).
+
+Xar-Trek integration: both engines can dispatch every prefill/decode
+step through an XarTrekRuntime so the scheduler (Algorithm 2) migrates
+steps between HOST/AUX/ACCEL as load changes — the Figure-6 throughput
+experiment's analogue, with the continuous engine playing the
+multi-tenant arrival stream.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Iterable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.model_config import ModelConfig
+from repro.core.function import MigratableFunction
 from repro.core.runtime import XarTrekRuntime
+from repro.core.targets import TargetKind
 from repro.models.model import Model, build_model
+from repro.serve.batch import Slot, SlotManager
+from repro.serve.scheduler import Request, RequestQueue
 
 
 @dataclasses.dataclass
@@ -113,3 +124,209 @@ class ServeEngine:
             else:
                 full[k] = cache[k].astype(full[k].dtype)
         return full
+
+
+# ------------------------------------------------------ continuous batching
+
+def prompt_bucket(n: int, min_bucket: int = 8) -> int:
+    """Next power-of-two prefill width >= n (bounds recompiles to
+    O(log max_prompt) shape buckets)."""
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return b
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous batching over one shared KV cache.
+
+    ``max_slots`` is the decode width (rows of the batched cache);
+    ``max_seq`` bounds prompt + generation length per slot.  Requests
+    arrive through ``submit``/``serve``; each engine loop iteration
+    admits arrived requests into free slots (one bucketed prefill each)
+    and then advances every in-flight request by one token (one ragged
+    decode across all slots, per-row cache positions).
+
+    With a ``runtime``, every prefill/decode dispatches through
+    ``XarTrekRuntime.call`` under the names ``{fn_prefix}_prefill`` /
+    ``{fn_prefix}_decode`` so Algorithm 2 picks the target per step; the
+    engine registers HOST and ACCEL variants (identical math — the
+    ACCEL build is the hardware-kernel stand-in, as in the examples)
+    unless the caller pre-registered its own.
+
+    Greedy sampling, matching ``ServeEngine`` token-for-token on the
+    same prompts.  Row-independent attention families only: ssm/hybrid
+    caches cannot seek per-row, and moe routing couples rows through
+    the shared expert-capacity budget.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_slots: int = 8,
+                 max_seq: int = 128,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 params=None, seed: int = 0,
+                 runtime: Optional[XarTrekRuntime] = None,
+                 fn_prefix: str = "cb", min_bucket: int = 8):
+        if cfg.family not in ("dense", "vlm"):
+            # ssm/hybrid caches are position-synchronised; moe routing is
+            # batch-coupled (capacity = f(batch tokens), so junk tokens
+            # from inactive slots would steal expert capacity from real
+            # requests and padded prefills would re-rank routing)
+            raise NotImplementedError(
+                f"continuous batching needs a per-row-seekable KV cache "
+                f"and row-independent math; family {cfg.family!r} is not")
+        self.cfg = cfg
+        self.model = build_model(cfg, mesh)
+        self.mesh = mesh
+        self.runtime = runtime
+        self.min_bucket = min_bucket
+        if params is None:
+            params = self.model.init(jax.random.PRNGKey(seed))
+        self.params = params
+        self.queue = RequestQueue()
+        self.slots = SlotManager(max_slots, max_seq)
+        self.cache = self.model.init_cache(max_slots, max_seq)
+        self._prefill = jax.jit(self.model.prefill_at)
+        # donate the cache: without aliasing every token copies the full
+        # (L, max_slots, max_seq, KV, hd) stack (see decode_attention)
+        self._decode = jax.jit(self.model.decode, donate_argnums=(1,))
+        # one fused in-place write of a request's bucketed prefill KV into
+        # its cache row (eager per-leaf updates would each materialize a
+        # full copy of the whole batched cache)
+        self._write_slot = jax.jit(
+            lambda cache, part, row: {
+                k: jax.lax.dynamic_update_slice(
+                    cache[k], part[k].astype(cache[k].dtype),
+                    (jnp.int32(0), row) + (jnp.int32(0),)
+                    * (cache[k].ndim - 2))
+                for k in cache},
+            donate_argnums=(0,))
+        self._prefill_name = f"{fn_prefix}_prefill"
+        self._decode_name = f"{fn_prefix}_decode"
+        self.results: dict[int, np.ndarray] = {}
+        self.stats = {"prefills": 0, "decode_steps": 0,
+                      "decode_row_util": 0.0}
+        if runtime is not None:
+            self._prepare_runtime(runtime, fn_prefix)
+
+    # ------------------------------------------------- runtime plumbing
+    def _prepare_runtime(self, rt: XarTrekRuntime, fn_prefix: str) -> None:
+        def prefill_fn(params, batch):
+            return self.model.prefill_at(params, batch)
+
+        def decode_fn(params, cache, batch):
+            return self.model.decode(params, cache, batch)
+
+        # one app (= one threshold row) per step function, so Algorithm 1
+        # doesn't mix prefill and decode timings in one row
+        for name, fn in ((self._prefill_name, prefill_fn),
+                         (self._decode_name, decode_fn)):
+            if name not in rt.registry:
+                rt.registry.register(MigratableFunction(
+                    name, name,
+                    {TargetKind.HOST: fn, TargetKind.ACCEL: fn}))
+        ex_prefill = (self.params,
+                      {"tokens": jnp.zeros((1, self.min_bucket), jnp.int32),
+                       "length": jnp.ones((1,), jnp.int32)})
+        ex_decode = (self.params, self.cache,
+                     {"tokens": jnp.zeros((self.slots.max_slots, 1),
+                                          jnp.int32),
+                      "index": jnp.zeros((self.slots.max_slots,),
+                                         jnp.int32)})
+        rt.prepare(self._prefill_name, *ex_prefill)
+        rt.prepare(self._decode_name, *ex_decode, donate_argnums=(1,))
+
+    # -------------------------------------------------------- admission
+    def submit(self, prompt, max_new_tokens: int = 16,
+               arrival_s: float = 0.0) -> int:
+        # validate at submission, not mid-serve: a request that cannot
+        # fit a cache row would otherwise fail only once a slot frees
+        return self.queue.submit(self.slots.validate(
+            Request(np.asarray(prompt), max_new_tokens, arrival_s)))
+
+    def _admit(self, req: Request) -> None:
+        S = req.prompt_len
+        Sb = prompt_bucket(S, self.min_bucket)
+        toks = np.zeros((1, Sb), np.int32)
+        toks[0, :S] = req.prompt
+        batch = {"tokens": jnp.asarray(toks),
+                 "length": jnp.full((1,), S, jnp.int32)}
+        if self.runtime is not None:
+            logits, pc = self.runtime.call(self._prefill_name,
+                                           self.params, batch)
+        else:
+            logits, pc = self._prefill(self.params, batch)
+        self.stats["prefills"] += 1
+        first = int(np.asarray(jnp.argmax(logits[0, -1])))
+        slot = self.slots.admit(req, first)
+        # write the request's bucketed KV into its cache row (leaves are
+        # (L, 1, S_bucket, KV, hd|1); seq is axis 2).  Positions [S,
+        # S_bucket) carry pad KV, which write-then-attend decode always
+        # overwrites before reading (see batch.py docstring)
+        if Sb > self.slots.max_seq:        # bucket overhangs the row
+            pc = {k: jax.lax.slice_in_dim(pc[k], 0, self.slots.max_seq,
+                                          axis=2) for k in pc}
+        self.cache = self._write_slot(self.cache, pc,
+                                      jnp.int32(slot.index))
+        if slot.done:                      # max_new_tokens == 1
+            self._finish(slot)
+
+    def _finish(self, slot: Slot) -> None:
+        self.results[slot.request.req_id] = np.asarray(slot.tokens, np.int32)
+        self.slots.release(slot)
+
+    # ----------------------------------------------------------- decode
+    def _decode_step(self) -> None:
+        active = self.slots.active_slots()
+        batch = {"tokens": jnp.asarray(self.slots.token_vector()),
+                 "index": jnp.asarray(self.slots.index_vector())}
+        if self.runtime is not None:
+            logits, self.cache = self.runtime.call(
+                self._decode_name, self.params, self.cache, batch)
+        else:
+            logits, self.cache = self._decode(self.params, self.cache, batch)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_row_util"] += len(active) / self.slots.max_slots
+        toks = np.asarray(jnp.argmax(logits[:, -1:], axis=-1))   # (B, 1)
+        for slot in active:
+            t = int(toks[slot.index, 0])
+            slot.tokens.append(t)
+            slot.last_token = t
+            slot.pos += 1
+            if slot.done:
+                self._finish(slot)
+
+    # ------------------------------------------------------- serve loop
+    def serve(self, requests: Iterable[Request] = (),
+              poll_s: float = 0.002) -> dict[int, np.ndarray]:
+        """Drain ``requests`` plus anything already submitted; returns
+        {req_id: (max_new_tokens,) int32 tokens} for the requests
+        completed by THIS call (``self.results`` is drained, so a
+        long-lived engine doesn't accumulate finished token arrays).
+        Arrival times are relative to this call's start."""
+        for r in requests:
+            self.queue.submit(self.slots.validate(r))
+        t0 = time.perf_counter()
+        while len(self.queue) or self.slots.active:
+            now = time.perf_counter() - t0
+            while self.slots.has_free():
+                req = self.queue.pop_arrived(now)
+                if req is None:
+                    break
+                self._admit(req)
+            if self.slots.active:
+                self._decode_step()
+            else:
+                nxt = self.queue.next_arrival()
+                if nxt is None:
+                    break
+                time.sleep(min(max(nxt - now, 0.0), 0.05) + poll_s)
+        out, self.results = self.results, {}
+        return out
+
+    def generate(self, prompts, max_new_tokens: int = 16) -> np.ndarray:
+        """ServeEngine.generate-compatible convenience: all prompts
+        arrive at t=0; returns (B, max_new_tokens) tokens in order."""
+        reqs = [Request(np.asarray(p), max_new_tokens)
+                for p in np.asarray(prompts)]
+        out = self.serve(reqs)
+        return np.stack([out[r.req_id] for r in reqs])

@@ -1,0 +1,89 @@
+"""Request admission for continuous-batching serving.
+
+A ``Request`` is one generation job (prompt + token budget) with an
+arrival time; the ``RequestQueue`` is the multi-tenant arrival stream of
+the paper's Figure-6 throughput experiment — requests become visible to
+the engine only once the serving clock passes their ``arrival_s``, and
+are admitted FIFO among the arrived.
+
+The queue is thread-safe so a driver thread can keep submitting while
+the engine loop drains (the single-process analogue of the paper's
+socket-connected applications).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import random
+import threading
+from typing import Iterable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation job.  ``prompt``: (S,) int32 token ids."""
+
+    prompt: np.ndarray
+    max_new_tokens: int = 16
+    arrival_s: float = 0.0
+    req_id: int = dataclasses.field(
+        default_factory=itertools.count().__next__)
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+class RequestQueue:
+    """Arrival-time-ordered FIFO of pending requests."""
+
+    def __init__(self, requests: Iterable[Request] = ()):
+        self._lock = threading.Lock()
+        self._heap: list[tuple[float, int, Request]] = []
+        self._seq = itertools.count()     # FIFO tie-break among same-time
+        for r in requests:
+            self.submit(r)
+
+    def submit(self, request: Request) -> int:
+        with self._lock:
+            heapq.heappush(self._heap,
+                           (request.arrival_s, next(self._seq), request))
+        return request.req_id
+
+    def pop_arrived(self, now: float) -> Optional[Request]:
+        """Earliest-arrived request with arrival_s <= now, else None."""
+        with self._lock:
+            if self._heap and self._heap[0][0] <= now:
+                return heapq.heappop(self._heap)[2]
+            return None
+
+    def next_arrival(self) -> Optional[float]:
+        with self._lock:
+            return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._heap)
+
+
+def poisson_arrivals(n: int, rate_per_s: float,
+                     rng: random.Random | int = 0) -> list[float]:
+    """n arrival times of a Poisson process with the given rate (exp(rate)
+    inter-arrival gaps) — the Figure-6 style multi-tenant stream."""
+    if not isinstance(rng, random.Random):
+        rng = random.Random(rng)
+    t, out = 0.0, []
+    for _ in range(n):
+        t += rng.expovariate(rate_per_s)
+        out.append(t)
+    return out

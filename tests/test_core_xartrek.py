@@ -6,7 +6,10 @@ import random
 import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis test dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.estimator import estimate_table, estimate_threshold, host_time_model
 from repro.core.kernel_bank import KernelBank, partition

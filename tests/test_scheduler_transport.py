@@ -1,0 +1,165 @@
+"""Direct coverage of the pieces core/runtime.py leans on: the TCP
+scheduler transport (round-trip, unknown-op and malformed-JSON error
+paths) and the KernelBank (LRU eviction, async-load race semantics)."""
+import json
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core.kernel_bank import KernelBank
+from repro.core.monitor import LoadMonitor
+from repro.core.scheduler import (SchedulerServer, TcpSchedulerClient,
+                                  TcpSchedulerServer)
+from repro.core.targets import DEFAULT_PLATFORM, TargetKind
+from repro.core.thresholds import ThresholdTable
+
+
+def _server(policy: str = "always_aux") -> SchedulerServer:
+    platform = DEFAULT_PLATFORM
+    return SchedulerServer(platform, ThresholdTable(),
+                           KernelBank(slots=2), LoadMonitor(platform),
+                           policy=policy)
+
+
+@pytest.fixture()
+def tcp():
+    srv = TcpSchedulerServer(_server())
+    addr = srv.start()
+    yield srv, addr
+    srv.stop()
+
+
+# ------------------------------------------------------------ TCP transport
+
+def test_tcp_request_report_roundtrip(tcp):
+    srv, addr = tcp
+    client = TcpSchedulerClient("appA", addr)
+    try:
+        d = client.before_call()
+        assert d.target == TargetKind.AUX         # always_aux policy
+        assert not d.reconfigure
+        client.after_call(TargetKind.AUX, 12.5)
+        row = srv.inner.table.row("appA")
+        assert row.arm_exec == 12.5               # Algorithm 1 recorded it
+        assert srv.inner.decisions[TargetKind.AUX] == 1
+    finally:
+        client.close()
+
+
+def test_tcp_many_clients_roundtrip(tcp):
+    srv, addr = tcp
+    clients = [TcpSchedulerClient(f"app{i}", addr) for i in range(4)]
+    try:
+        for c in clients:
+            for _ in range(3):
+                assert c.before_call().target == TargetKind.AUX
+        assert srv.inner.decisions[TargetKind.AUX] == 12
+    finally:
+        for c in clients:
+            c.close()
+
+
+def _raw_rpc(addr, line: bytes) -> dict:
+    with socket.create_connection(addr) as sock:
+        f = sock.makefile("rwb")
+        f.write(line)
+        f.flush()
+        return json.loads(f.readline())
+
+
+def test_tcp_unknown_op_reports_error(tcp):
+    _, addr = tcp
+    resp = _raw_rpc(addr, b'{"op": "bogus"}\n')
+    assert resp == {"error": "unknown op bogus"}
+
+
+def test_tcp_malformed_json_reports_error_and_keeps_serving(tcp):
+    _, addr = tcp
+    resp = _raw_rpc(addr, b"this is not json\n")
+    assert "error" in resp
+    # a malformed line must not take the server down
+    resp = _raw_rpc(addr, b'{"op": "request", "app": "x"}\n')
+    assert resp["flag"] == TargetKind.AUX.flag
+
+
+def test_tcp_missing_field_reports_error(tcp):
+    _, addr = tcp
+    resp = _raw_rpc(addr, b'{"op": "request"}\n')   # no "app"
+    assert "error" in resp
+
+
+# -------------------------------------------------------------- KernelBank
+
+def _tick_clock():
+    """Deterministic strictly-increasing clock."""
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    return clock
+
+
+def test_bank_lru_eviction_prefers_least_recently_used():
+    bank = KernelBank(slots=2, clock=_tick_clock())
+    bank.load_sync("a")
+    bank.load_sync("b")
+    assert bank.is_resident("a")        # touch a -> b is now LRU
+    bank.load_sync("c")
+    assert bank.resident_kernels() == ["a", "c"]
+    assert bank.stats["evictions"] == 1
+    assert bank.stats["loads"] == 3
+
+
+def test_bank_load_race_window_then_resident():
+    """Algorithm 2's 'No HW kernel' branch: while the async load runs the
+    kernel is NOT resident (callers keep executing on a CPU target — the
+    latency-hiding fallback runtime.call performs), and is_loading
+    reports the in-flight reconfiguration."""
+    started = threading.Event()
+    release = threading.Event()
+
+    def slow_load(name):
+        started.set()
+        assert release.wait(5.0)
+        return name
+
+    bank = KernelBank(slots=2, load_fn=slow_load)
+    bank.load_async("k")
+    assert started.wait(5.0)
+    assert not bank.is_resident("k")    # race window: load still running
+    assert bank.is_loading("k")
+    hits_before = bank.stats["hits"]
+    misses_before = bank.stats["misses"]
+    assert misses_before >= 1
+    release.set()
+    deadline = time.time() + 5.0
+    while not bank.is_resident("k") and time.time() < deadline:
+        time.sleep(0.01)
+    assert bank.is_resident("k")
+    assert bank.stats["hits"] > hits_before
+    assert not bank.is_loading("k")
+    assert bank.get("k") == "k"
+
+
+def test_bank_duplicate_load_async_is_idempotent():
+    release = threading.Event()
+    calls = []
+
+    def slow_load(name):
+        calls.append(name)
+        release.wait(5.0)
+        return name
+
+    bank = KernelBank(slots=2, load_fn=slow_load)
+    bank.load_async("k")
+    bank.load_async("k")                # second request: no second thread
+    release.set()
+    bank.load_sync("k")
+    assert calls == ["k"]
+    assert bank.stats["loads"] == 1
+    bank.load_async("k")                # already resident: no-op
+    assert bank.stats["loads"] == 1

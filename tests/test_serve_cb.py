@@ -1,0 +1,207 @@
+"""Continuous-batching serve engine: token equivalence with the
+synchronous engine, slot reuse, ragged arrivals through the Xar-Trek
+runtime, and the shape-bucketed binary cache."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduced
+from repro.core.function import FunctionRegistry
+from repro.core.runtime import XarTrekRuntime
+from repro.core.targets import TargetKind
+from repro.serve import (ContinuousBatchingEngine, Request, RequestQueue,
+                         ServeEngine, poisson_arrivals, prompt_bucket)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(reduced(ARCHS["smollm-135m"]),
+                               dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def sync_engine(cfg):
+    return ServeEngine(cfg, seed=0)
+
+
+def _prompts(cfg, B, S, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+
+
+# ------------------------------------------------------------- equivalence
+
+def test_cb_tokens_match_sync_engine(cfg, sync_engine):
+    """Byte-identical greedy tokens on the same prompts and weights."""
+    prompts = _prompts(cfg, B=4, S=12)
+    want = sync_engine.generate(prompts, max_new_tokens=6).tokens
+    cb = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=64,
+                                  params=sync_engine.params)
+    got = cb.generate(np.asarray(prompts), max_new_tokens=6)
+    np.testing.assert_array_equal(want, got)
+
+
+def test_cb_tokens_match_sync_when_slots_fewer_than_requests(cfg, sync_engine):
+    """Two waves through 2 slots still reproduce the 4-row sync batch
+    (slot state fully resets between occupants)."""
+    prompts = _prompts(cfg, B=4, S=12)
+    want = sync_engine.generate(prompts, max_new_tokens=5).tokens
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                  params=sync_engine.params)
+    got = cb.generate(np.asarray(prompts), max_new_tokens=5)
+    np.testing.assert_array_equal(want, got)
+
+
+# ---------------------------------------------------------------- slotting
+
+def test_slot_reuse_after_eviction(cfg, sync_engine):
+    rng = np.random.RandomState(1)
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                  params=sync_engine.params)
+    reqs = [Request(rng.randint(0, cfg.vocab_size, size=8),
+                    max_new_tokens=n) for n in (3, 1, 4, 2, 3)]
+    out = cb.serve(reqs)
+    assert sorted(out) == sorted(r.req_id for r in reqs)
+    for r in reqs:
+        assert out[r.req_id].shape == (r.max_new_tokens,)
+    st = cb.slots.stats
+    assert st["admitted"] == 5 and st["released"] == 5
+    assert st["peak_active"] <= 2
+    assert sum(cb.slots.slot_uses) == 5
+    assert max(cb.slots.slot_uses) >= 3          # some row was reused
+    assert not cb.slots.active                   # everything evicted
+
+
+def test_overlong_request_rejected_at_submission(cfg, sync_engine):
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=16,
+                                  params=sync_engine.params)
+    with pytest.raises(ValueError, match="positions"):
+        cb.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=20)
+    with pytest.raises(ValueError, match="positions"):
+        cb.serve([Request(np.arange(1, 9, dtype=np.int32),
+                          max_new_tokens=20)])
+    # the engine stays usable after a rejection
+    out = cb.generate(np.arange(1, 9, dtype=np.int32)[None, :],
+                      max_new_tokens=2)
+    assert out.shape == (1, 2)
+
+
+def test_bucket_overhanging_cache_row_is_clamped(cfg, sync_engine):
+    """max_seq=12 (not a power of two): a 9-token prompt prefills in a
+    16-wide bucket that overhangs the cache row; the write is clamped
+    and tokens still match the sync engine."""
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=12,
+                                  params=sync_engine.params)
+    prompt = np.arange(1, 10, dtype=np.int32)[None, :]
+    got = cb.generate(prompt, max_new_tokens=3)
+    want = sync_engine.generate(jnp.asarray(prompt), max_new_tokens=3).tokens
+    np.testing.assert_array_equal(want, got)
+
+
+def test_serve_drains_results_per_call(cfg, sync_engine):
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=32,
+                                  params=sync_engine.params)
+    first = cb.serve([Request(np.arange(1, 6, dtype=np.int32),
+                              max_new_tokens=2)])
+    second = cb.serve([Request(np.arange(1, 6, dtype=np.int32),
+                               max_new_tokens=2)])
+    assert len(first) == 1 and len(second) == 1
+    assert set(first) != set(second)       # no all-time accumulation
+    assert not cb.results
+
+
+def test_cb_rejects_position_synchronised_families():
+    ssm_cfg = reduced(ARCHS["mamba2-2.7b"])
+    with pytest.raises(NotImplementedError):
+        ContinuousBatchingEngine(ssm_cfg, max_slots=2, max_seq=32)
+
+
+# ----------------------------------------------------------- runtime path
+
+def test_ragged_arrivals_through_runtime(cfg):
+    rt = XarTrekRuntime(registry=FunctionRegistry(),
+                        min_reconfig_seconds=0.0)
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                  runtime=rt, seed=0)
+    rng = np.random.RandomState(0)
+    reqs = [Request(rng.randint(0, cfg.vocab_size,
+                                size=int(rng.randint(4, 20))),
+                    max_new_tokens=int(rng.randint(1, 6)),
+                    arrival_s=0.005 * i)
+            for i in range(6)]
+    out = cb.serve(reqs)
+    assert len(out) == len(reqs)
+    assert rt.call_log, "no step went through the runtime"
+    # every executed target is a declared variant of the called function
+    for rec in rt.call_log:
+        fn = rt.registry.get(rec["fn"])
+        assert TargetKind(rec["target"]) in fn.variants, rec
+    per_fn = {rec["fn"] for rec in rt.call_log}
+    assert per_fn == {"cb_prefill", "cb_decode"}
+
+
+def test_runtime_tokens_match_no_runtime(cfg, sync_engine):
+    """Dispatching through XarTrekRuntime must not change the math."""
+    prompts = _prompts(cfg, B=3, S=10)
+    want = sync_engine.generate(prompts, max_new_tokens=4).tokens
+    rt = XarTrekRuntime(registry=FunctionRegistry(),
+                        min_reconfig_seconds=0.0)
+    cb = ContinuousBatchingEngine(cfg, max_slots=3, max_seq=64,
+                                  runtime=rt, params=sync_engine.params)
+    got = cb.generate(np.asarray(prompts), max_new_tokens=4)
+    np.testing.assert_array_equal(want, got)
+
+
+def test_prefill_shape_buckets_cached(cfg, sync_engine):
+    """Different prompt lengths hit different prefill buckets; repeats
+    reuse the LRU'd compile instead of recompiling."""
+    rt = XarTrekRuntime(registry=FunctionRegistry(),
+                        min_reconfig_seconds=0.0)
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                  runtime=rt, params=sync_engine.params,
+                                  min_bucket=8)
+    rng = np.random.RandomState(2)
+    for S in (4, 12, 20, 12, 4):         # buckets 8, 16, 32, 16, 8
+        cb.submit(rng.randint(0, cfg.vocab_size, size=S), max_new_tokens=1)
+    cb.serve()
+    stats = rt.binaries["cb_prefill"].shape_stats
+    # bucket 8 matches the prepare()-time default; 16 and 32 are bucket
+    # compiles, re-used on repeat
+    assert stats["misses"] == 2
+    assert stats["hits"] >= 1
+    assert stats["evictions"] == 0
+
+
+# ------------------------------------------------------- queue + buckets
+
+def test_request_queue_orders_by_arrival_then_fifo():
+    q = RequestQueue()
+    a = Request(np.array([1]), arrival_s=0.5)
+    b = Request(np.array([2]), arrival_s=0.0)
+    c = Request(np.array([3]), arrival_s=0.0)
+    for r in (a, b, c):
+        q.submit(r)
+    assert q.pop_arrived(now=0.1) is b         # earliest arrival wins
+    assert q.pop_arrived(now=0.1) is c         # FIFO among equal arrivals
+    assert q.pop_arrived(now=0.1) is None      # a not arrived yet
+    assert q.next_arrival() == 0.5
+    assert q.pop_arrived(now=1.0) is a
+    assert len(q) == 0
+
+
+def test_poisson_arrivals_monotone_and_rate():
+    times = poisson_arrivals(2000, rate_per_s=10.0, rng=0)
+    assert all(b > a for a, b in zip(times, times[1:]))
+    mean_gap = times[-1] / len(times)
+    assert 0.08 < mean_gap < 0.12              # ~1/rate
+
+
+def test_prompt_bucket_powers_of_two():
+    assert prompt_bucket(1) == 8
+    assert prompt_bucket(8) == 8
+    assert prompt_bucket(9) == 16
+    assert prompt_bucket(33) == 64

@@ -1,7 +1,11 @@
 """Property tests on the platform simulator's invariants."""
 import random
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis test dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.sim import AppProfile, PAPER_APPS, PlatformSim
 from repro.core.targets import TargetKind
