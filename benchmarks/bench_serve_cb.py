@@ -2,22 +2,37 @@
 
 The Figure-6 scenario on real JAX serving: a multi-tenant stream of
 generation requests (Poisson arrivals, ragged prompt lengths and token
-budgets) served two ways on the same model and weights:
+budgets) served three ways on the same model and weights:
 
   * synchronous (static) batching — collect up to ``max_slots`` arrived
     requests, left-pad prompts to a fixed width, run the whole batch for
     the batch-max token budget, then pick up the next batch;
   * continuous batching — admit requests into KV slots the moment they
-    arrive, interleave prefill with decode, evict finished slots.
+    arrive, interleave prefill with decode, evict finished slots;
+  * paged continuous batching (default on; ``--no-paged`` skips it) —
+    same engine
+    over a shared block pool at the SAME KV memory as the dense cache,
+    with twice the decode rows: short requests stop reserving full rows,
+    so more of them run concurrently.
 
-Emits ``serve_cb/*`` rows; derived carries tok/s for both engines and
-the continuous/synchronous throughput ratio (the acceptance headline).
+Emits ``serve_cb/*`` rows; derived carries tok/s for each engine, the
+continuous/synchronous throughput ratio, and the paged engine's peak
+concurrent slots vs. dense (the paging headline).
 
     PYTHONPATH=src python -m benchmarks.bench_serve_cb
+
+CI smoke mode (tiny stream, JSON artifact, throughput floor):
+
+    PYTHONPATH=src python -m benchmarks.bench_serve_cb \
+        --n-requests 8 --rate 40 --json bench_serve_cb.json \
+        --check-floor benchmarks/floor.json
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
+import sys
 import time
 
 import numpy as np
@@ -30,14 +45,14 @@ from repro.serve.scheduler import RequestQueue, poisson_arrivals
 MAX_SLOTS = 4
 MAX_SEQ = 96
 PAD_TO = 32            # static batching pads every prompt to this width
-N_REQUESTS = 24
-RATE_PER_S = 12.0      # Poisson arrival rate
+BLOCK_SIZE = 32        # paged engine's KV block width
 SEED = 0
 
 
-def make_requests(vocab: int, seed: int = SEED) -> list[Request]:
+def make_requests(vocab: int, n: int, rate: float,
+                  seed: int = SEED) -> list[Request]:
     rng = np.random.RandomState(seed)
-    arrivals = poisson_arrivals(N_REQUESTS, RATE_PER_S, seed)
+    arrivals = poisson_arrivals(n, rate, seed)
     return [Request(rng.randint(0, vocab, size=int(rng.randint(4, PAD_TO))),
                     max_new_tokens=int(rng.randint(4, 24)),
                     arrival_s=t)
@@ -86,34 +101,116 @@ def serve_continuous(engine: ContinuousBatchingEngine,
     return elapsed
 
 
-def main() -> None:
+def warm(engine, vocab: int, static: bool = False) -> None:
+    reqs = [Request(np.arange(1, 5, dtype=np.int32) % vocab,
+                    max_new_tokens=2)]
+    if static:
+        serve_static(engine, reqs)
+    else:
+        serve_continuous(engine, reqs)
+        engine.reset_stats()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n-requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=12.0,
+                    help="Poisson arrival rate (requests/s)")
+    ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--no-paged", action="store_true",
+                    help="skip the paged-engine run")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write results as JSON (CI artifact)")
+    ap.add_argument("--check-floor", metavar="PATH",
+                    help="fail (exit 1) if tok/s drops below the floors "
+                         "in this JSON file")
+    # parse_known_args: benchmarks.run invokes main() under ITS argv
+    # (--only ...); unknown flags must not crash the module
+    args, _ = ap.parse_known_args(argv)
+
     cfg = dataclasses.replace(reduced(ARCHS["smollm-135m"]), dtype="float32")
-    sync = ServeEngine(cfg, seed=SEED)
+    sync = ServeEngine(cfg, seed=args.seed)
     cb = ContinuousBatchingEngine(cfg, max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
                                   params=sync.params)
+    # equal usable KV memory to the dense engine (MAX_SLOTS * MAX_SEQ
+    # positions), but 2x the decode rows: the pool, not row count, is
+    # the capacity bound, so the ragged stream packs more requests in
+    paged = None
+    if not args.no_paged:
+        paged = ContinuousBatchingEngine(
+            cfg, max_slots=2 * MAX_SLOTS, max_seq=MAX_SEQ,
+            params=sync.params, paged=True, block_size=BLOCK_SIZE,
+            num_blocks=MAX_SLOTS * MAX_SEQ // BLOCK_SIZE, fn_prefix="pcb")
 
-    # warm both compile caches outside the timed runs
-    warm = [Request(np.arange(1, 5, dtype=np.int32) % cfg.vocab_size,
-                    max_new_tokens=2)]
-    serve_static(sync, [dataclasses.replace(w, arrival_s=0.0) for w in warm])
-    serve_continuous(cb, warm)
-    cb.stats = {"prefills": 0, "decode_steps": 0, "decode_row_util": 0.0}
+    # warm every compile cache outside the timed runs
+    warm(sync, cfg.vocab_size, static=True)
+    warm(cb, cfg.vocab_size)
+    if paged is not None:
+        warm(paged, cfg.vocab_size)
 
-    reqs = make_requests(cfg.vocab_size)
+    reqs = make_requests(cfg.vocab_size, args.n_requests, args.rate,
+                         args.seed)
     tokens = total_tokens(reqs)
 
     t_sync = serve_static(sync, [dataclasses.replace(r) for r in reqs])
     t_cb = serve_continuous(cb, [dataclasses.replace(r) for r in reqs])
+    results = {
+        "n_requests": args.n_requests, "rate_per_s": args.rate,
+        "tokens": tokens,
+        "sync_tok_s": tokens / t_sync,
+        "cb_tok_s": tokens / t_cb,
+        "cb_peak_active": cb.slots.stats["peak_active"],
+        "cb_vs_sync": (tokens / t_cb) / max(tokens / t_sync, 1e-9),
+    }
+    if paged is not None:
+        t_paged = serve_continuous(paged,
+                                   [dataclasses.replace(r) for r in reqs])
+        results.update({
+            "paged_tok_s": tokens / t_paged,
+            "paged_peak_active": paged.slots.stats["peak_active"],
+            "paged_preempted": paged.slots.stats["preempted"],
+            "paged_vs_dense_cb": (tokens / t_paged) / (tokens / t_cb),
+        })
 
-    sync_tps = tokens / t_sync
-    cb_tps = tokens / t_cb
     util = cb.stats["decode_row_util"] / max(cb.stats["decode_steps"], 1)
-    emit("serve_cb/sync", t_sync * 1e6 / tokens, f"{sync_tps:.1f}tok/s")
+    emit("serve_cb/sync", t_sync * 1e6 / tokens,
+         f"{results['sync_tok_s']:.1f}tok/s")
     emit("serve_cb/continuous", t_cb * 1e6 / tokens,
-         f"{cb_tps:.1f}tok/s util={util:.2f}")
+         f"{results['cb_tok_s']:.1f}tok/s util={util:.2f}")
     emit("serve_cb/ratio", 0.0,
-         f"continuous_vs_sync={cb_tps / max(sync_tps, 1e-9):.2f}x")
+         f"continuous_vs_sync={results['cb_vs_sync']:.2f}x")
+    if paged is not None:
+        emit("serve_cb/paged", t_paged * 1e6 / tokens,
+             f"{results['paged_tok_s']:.1f}tok/s "
+             f"peak_slots={results['paged_peak_active']}"
+             f"(dense={results['cb_peak_active']}) "
+             f"preempted={results['paged_preempted']}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+
+    if args.check_floor:
+        with open(args.check_floor) as f:
+            floor = json.load(f)
+        failed = []
+        for key, minimum in floor.items():
+            got = results.get(key.removesuffix("_min"))
+            if got is None:
+                # a floor with no matching result (typo'd key, renamed
+                # metric, --no-paged) must fail loudly, not pass vacuously
+                failed.append(f"{key}: no result named "
+                              f"{key.removesuffix('_min')!r}")
+            elif got < minimum:
+                failed.append(f"{key.removesuffix('_min')}={got:.2f} "
+                              f"< floor {minimum}")
+        if failed:
+            print("FLOOR CHECK FAILED: " + "; ".join(failed),
+                  file=sys.stderr)
+            return 1
+        print(f"floor check passed ({len(floor)} floors)")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -23,9 +23,19 @@ from repro.core.targets import TargetKind
 def shape_key(args: tuple) -> tuple:
     """Hashable (treedef, leaf shapes/dtypes) signature of a call's args.
     Computed per runtime call, so no stringification — PyTreeDef hashes
-    and compares natively, shapes/dtypes are already hashable."""
+    and compares natively, shapes/dtypes are already hashable.
+
+    Every leaf participates, so paged-decode calls key on their
+    block-table shape (B, table_width) alongside the cache pool and
+    token leaves: a paged engine's steady-state decode signature is
+    static and compiles exactly once, outside Algorithm 1's timed
+    region.  Non-array leaves (python scalars riding in a batch dict)
+    key on (type, value) — a changed static scalar must not silently
+    reuse another signature's executable."""
     leaves, treedef = jax.tree.flatten(args)
-    return (treedef, tuple((l.shape, l.dtype) for l in leaves))
+    return (treedef, tuple(
+        (l.shape, l.dtype) if hasattr(l, "shape") else (type(l), l)
+        for l in leaves))
 
 
 @dataclasses.dataclass

@@ -10,7 +10,7 @@ pre-configuration at main()) lives in runtime.XarTrekRuntime.call.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 

@@ -18,7 +18,7 @@ from typing import Any, Optional
 import jax
 
 from repro.core.binary import MultiTargetBinary
-from repro.core.function import GLOBAL_REGISTRY, FunctionRegistry, MigratableFunction
+from repro.core.function import GLOBAL_REGISTRY, FunctionRegistry
 from repro.core.kernel_bank import KernelBank
 from repro.core.migration import migrate
 from repro.core.monitor import LoadMonitor

@@ -17,7 +17,7 @@ import json
 import socket
 import socketserver
 import threading
-from typing import Callable, Optional
+from typing import Optional
 
 from repro.core.kernel_bank import KernelBank
 from repro.core.monitor import LoadMonitor

@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Callable, Optional
+from typing import Optional
 
 from repro.core.policy import schedule
 from repro.core.targets import DEFAULT_PLATFORM, Platform, TargetKind

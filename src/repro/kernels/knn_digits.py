@@ -10,7 +10,6 @@ matching the paper's self-contained-function migration model.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

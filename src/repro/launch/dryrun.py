@@ -74,7 +74,6 @@ def build_step(model: Model, cfg: ModelConfig, shape: ShapeConfig, mesh):
         step = make_train_step(model, tcfg)
         in_s, out_s = train_step_shardings(model, tcfg, mesh)
         pshapes = model.shapes()
-        from repro.optim.adamw import AdamW
         oshapes = {
             "m": jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct(s.shape, jax.numpy.float32),

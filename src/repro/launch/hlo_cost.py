@@ -29,7 +29,6 @@ Cost conventions (per partition, matching roofline usage):
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Optional
 

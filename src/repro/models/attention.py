@@ -207,6 +207,25 @@ def init_kv_cache(num_layers: int, batch: int, max_seq: int,
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
+def init_paged_kv_cache(num_layers: int, num_blocks: int, block_size: int,
+                        num_kv_heads: int, head_dim: int, dtype: str) -> dict:
+    """Block-pool KV cache for paged continuous batching.
+
+    Layout (L, num_blocks, block_size, KV, hd): physical blocks replace
+    the dense (batch, max_seq) plane; a per-request block table maps
+    logical position p to (table[p // block_size], p % block_size).
+    ``num_blocks`` counts PHYSICAL blocks, i.e. the pool's usable blocks
+    plus the reserved junk block 0 (see serve.batch.BlockPool).
+    """
+    if dtype == "int8":
+        raise NotImplementedError(
+            "paged KV does not support int8 cache quantization yet "
+            "(per-block scales need their own pool)")
+    shape = (num_layers, num_blocks, block_size, num_kv_heads, head_dim)
+    dt = jnp.dtype(dtype)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
 def cache_specs(rules, int8: bool) -> dict:
     """PartitionSpecs matching init_kv_cache layout."""
     s = rules.spec("layers", "batch", "cache_seq", "kv_heads", "head_dim")

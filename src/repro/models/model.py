@@ -7,13 +7,11 @@ appropriate shardings.  Nothing here touches devices at import time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.model_config import ModelConfig, ShapeConfig
 from repro.models import hybrid as hybrid_lib
@@ -195,6 +193,20 @@ class Model:
         cache["attn_v"] = jnp.zeros_like(cache["attn_k"])
         return cache
 
+    def init_paged_cache(self, num_blocks: int, block_size: int) -> dict:
+        """Block-pool KV cache (see attention.init_paged_kv_cache).
+        ``num_blocks`` counts physical blocks, including the reserved
+        junk block 0.  Attention families only: ssm/hybrid carry
+        scan-state, not an addressable KV plane."""
+        cfg, geom = self.cfg, self.geom
+        if cfg.family not in ("dense", "moe", "vlm", "audio"):
+            raise NotImplementedError(
+                f"paged KV cache: {cfg.family} has no paged layout")
+        from repro.models.attention import init_paged_kv_cache
+        return init_paged_kv_cache(cfg.num_layers, num_blocks, block_size,
+                                   geom.kv_heads, cfg.resolved_head_dim,
+                                   cfg.kv_cache_dtype)
+
     def cache_specs(self, global_batch: Optional[int] = None) -> dict:
         cfg = self.cfg
         rules = self.fitted_rules(global_batch)
@@ -214,7 +226,6 @@ class Model:
         """PartitionSpecs for a training/prefill batch dict."""
         cfg = self.cfg
         rules = self.fitted_rules(global_batch)
-        b = rules.spec("batch")
         bs = rules.spec("batch", None)
         out = {"tokens": bs, "labels": bs}
         if cfg.family == "audio" and cfg.num_codebooks > 1:

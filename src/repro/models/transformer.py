@@ -10,8 +10,7 @@ required (see DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import numpy as np
 
@@ -22,12 +21,11 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.model_config import ModelConfig
 from repro.models import attention as attn_lib
 from repro.models.common import (
-    ParamDef, apply_rope, cross_entropy, gelu_mlp, init_params, param_specs,
-    param_shapes, rmsnorm, swiglu,
+    ParamDef, apply_rope, cross_entropy, gelu_mlp, rmsnorm, swiglu,
 )
 from repro.parallel.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS, batch_axes
 from repro.parallel.sharding import (
-    DEFAULT_RULES, ShardingRules, divisible, padded_size,
+    DEFAULT_RULES, ShardingRules, padded_size,
 )
 
 from repro.parallel.compat import shard_map  # noqa: F401  (re-exported)
@@ -397,10 +395,34 @@ def _write_kv_layer(stack, new, li, cache_index):
         stack, new.astype(stack.dtype)[None], (li, 0, cache_index, 0, 0))
 
 
+def _gather_paged_kv(stack, li, table):
+    """Gather one layer's paged KV into per-row logical order.
+
+    stack: (L, NB_phys, BS, KV, hd) block pool; table: (B, NBT) physical
+    block ids, logical block j of row b lives at ``table[b, j]``.
+    Returns (B, NBT*BS, KV, hd) — the same row-major layout dense decode
+    attention reads, so ``decode_attention`` applies unchanged.
+    """
+    layer = jax.lax.dynamic_index_in_dim(stack, li, 0, keepdims=False)
+    rows = jnp.take(layer, table, axis=0)          # (B, NBT, BS, KV, hd)
+    b, nbt, bs = rows.shape[:3]
+    return rows.reshape(b, nbt * bs, *rows.shape[3:])
+
+
+def _write_kv_block(stack, new, li, blk, off):
+    """Scatter the new token's KV (B,1,KV,hd) into layer ``li`` of the
+    block pool at per-row (physical block, offset).  Rows sharing a
+    target (inactive rows all hit junk block 0 offset 0) are benign:
+    nothing ever reads the junk block."""
+    return stack.at[li, blk, off].set(new[:, 0].astype(stack.dtype))
+
+
 def forward(params, batch, cfg: ModelConfig, geom: Geometry, mesh, *,
             mode: str, cache: dict | None = None):
     """mode: train | prefill | decode.
 
+    Decode reads a dense (L,B,Smax,KV,hd) cache, or — when the batch
+    carries a ``block_table`` — a paged (L,NB,BS,KV,hd) block pool.
     Returns (logits, new_cache_or_None, aux_loss).
     """
     x = embed_inputs(params, batch, cfg)
@@ -447,6 +469,9 @@ def forward(params, batch, cfg: ModelConfig, geom: Geometry, mesh, *,
                 a = jnp.zeros((), jnp.float32)
             return (x + h, ck, cv, li + 1, aux + a), None
 
+        if "block_table" in batch:
+            return _forward_decode_paged(params, batch, cfg, geom, mesh,
+                                         cache, x, positions)
         if cache["k"].dtype == jnp.int8:
             return _forward_decode_int8(params, batch, cfg, geom, mesh,
                                         cache, x, positions)
@@ -526,5 +551,55 @@ def _forward_decode_int8(params, batch, cfg, geom, mesh, cache, x, positions):
          jnp.int32(0), jnp.zeros((), jnp.float32)),
         params["layers"])
     new_cache = {"k": ck, "v": cv, "k_scale": ks, "v_scale": vs}
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return output_logits(params, x, cfg), new_cache, aux
+
+
+def _forward_decode_paged(params, batch, cfg, geom, mesh, cache, x, positions):
+    """Decode-layer scan over a paged (block-pool) KV cache.
+
+    batch carries ragged per-row state: ``index`` (B,) logical write
+    positions and ``block_table`` (B, NBT) physical block ids.  Each
+    layer gathers the row's blocks into logical order, attends with the
+    explicit-new-token path (write-then-attend preserved: the gather
+    never includes the current position — it is masked by ``index`` —
+    and the new token's KV is passed to attention directly, then
+    scattered into the pool).  Math is identical to the dense body; only
+    the cache addressing differs, so greedy tokens match byte-for-byte
+    when the attention span (NBT * BS) equals the dense max_seq.
+    """
+    cache_index = batch["index"]                   # (B,)
+    table = batch["block_table"]                   # (B, NBT) int32
+    bs = cache["k"].shape[2]
+    kv_idx = kv_index_for(cfg, geom)
+    attn_index = cache_index[:, None, None, None]
+    blk = jnp.take_along_axis(table, (cache_index // bs)[:, None],
+                              axis=1)[:, 0]        # (B,) physical block
+    off = cache_index % bs
+
+    def body(carry, lp):
+        x, ck, cv, li, aux = carry
+        xn = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = qkv_project(xn, lp, cfg, geom, positions)
+        kc = _gather_paged_kv(ck, li, table).astype(x.dtype)
+        vc = _gather_paged_kv(cv, li, table).astype(x.dtype)
+        out = attn_lib.decode_attention(q, kc, vc, attn_index,
+                                        kv_index=kv_idx, k_new=k, v_new=v)
+        ck = _write_kv_block(ck, k, li, blk, off)
+        cv = _write_kv_block(cv, v, li, blk, off)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
+        if cfg.family == "moe":
+            h, a = moe_block(rmsnorm(x, lp["ln2"], cfg.norm_eps), lp,
+                             cfg, mesh)
+        else:
+            h = dense_mlp_block(rmsnorm(x, lp["ln2"], cfg.norm_eps), lp, cfg)
+            a = jnp.zeros((), jnp.float32)
+        return (x + h, ck, cv, li + 1, aux + a), None
+
+    (x, ck, cv, _, aux), _ = jax.lax.scan(
+        body,
+        (x, cache["k"], cache["v"], jnp.int32(0), jnp.zeros((), jnp.float32)),
+        params["layers"])
+    new_cache = dict(cache, k=ck, v=cv)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return output_logits(params, x, cfg), new_cache, aux

@@ -8,7 +8,7 @@ reduce-scatter + (param) all-gather, the ZeRO-1 communication pattern.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

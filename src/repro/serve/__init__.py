@@ -1,4 +1,4 @@
-from repro.serve.batch import Slot, SlotManager
+from repro.serve.batch import BlockPool, PagedSlotManager, Slot, SlotManager
 from repro.serve.engine import (
     ContinuousBatchingEngine, GenerationResult, ServeEngine, prompt_bucket,
 )

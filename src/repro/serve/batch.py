@@ -1,20 +1,35 @@
 """Per-request KV-cache slot management for continuous batching.
 
-The engine owns one batched KV cache of fixed width ``max_slots`` (the
-decode batch) and length ``max_seq``.  Each in-flight request occupies
-one row ("slot"): admission writes its prefilled KV into the row,
-decode steps advance the row's position independently of its
-neighbours, and completion frees the row for the next arrival.
+Two cache layouts share one slot abstraction:
+
+* ``SlotManager`` (dense): the engine owns one batched KV cache of
+  fixed width ``max_slots`` (the decode batch) and length ``max_seq``.
+  Each in-flight request occupies one row ("slot"): admission writes
+  its prefilled KV into the row, decode steps advance the row's
+  position independently of its neighbours, and completion frees the
+  row for the next arrival.  A request reserves the FULL row for its
+  lifetime, so capacity = max_slots regardless of actual lengths.
+
+* ``PagedSlotManager`` (paged, vLLM-style): the cache is a pool of
+  fixed-size blocks of ``block_size`` positions; each slot holds a
+  *block table* mapping its logical positions [j*bs, (j+1)*bs) to a
+  physical block.  Admission only needs the prompt's blocks, decode
+  allocates one block at a time on demand, so capacity is bounded by
+  the POOL (total positions in flight), not by rows x max_seq — short
+  requests no longer reserve space they never use.
 
 Stale KV beyond a slot's current position is never cleared: decode is
 write-then-attend (the new token's KV lands at ``pos`` before any later
 step reads it) and attention masks positions beyond ``pos``, so a fresh
-request only ever reads positions its own prefill/decode wrote.
+request only ever reads positions its own prefill/decode wrote.  Under
+paging, physical block 0 is reserved as the junk block: inactive decode
+rows carry an all-zero block table and position 0, so their masked
+writes land in block 0 and can never corrupt a live request's blocks.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import itertools
 
 import numpy as np
 
@@ -23,17 +38,21 @@ from repro.serve.scheduler import Request
 
 @dataclasses.dataclass
 class Slot:
-    """One occupied row of the batched KV cache."""
+    """One occupied row of the batched decode."""
 
-    index: int                 # row in the batched cache
+    index: int                 # row in the batched cache / decode batch
     request: Request
     pos: int                   # next cache write position (= tokens cached)
     last_token: int            # token to feed at the next decode step
     tokens: list[int] = dataclasses.field(default_factory=list)
+    blocks: list[int] = dataclasses.field(default_factory=list)  # paged only
+    seq: int = 0               # admission order (preemption picks youngest)
 
     @property
     def done(self) -> bool:
-        return len(self.tokens) >= self.request.max_new_tokens
+        if len(self.tokens) >= self.request.max_new_tokens:
+            return True
+        return bool(self.tokens) and self.request.stops(self.tokens[-1])
 
 
 class SlotManager:
@@ -44,8 +63,25 @@ class SlotManager:
         self.max_seq = max_seq
         self._free: list[int] = list(range(max_slots))[::-1]  # pop() -> 0 first
         self.active: dict[int, Slot] = {}
-        self.stats = {"admitted": 0, "released": 0, "peak_active": 0}
+        self._stats = {"admitted": 0, "released": 0, "peak_active": 0}
         self.slot_uses = [0] * max_slots
+        self._seq = itertools.count()
+
+    @property
+    def stats(self) -> dict:
+        """Counters plus live fragmentation accounting: ``reserved_positions``
+        is what the active requests HOLD (dense: a full row each),
+        ``used_positions`` what they have actually written — the gap is
+        the waste paging exists to reclaim."""
+        out = dict(self._stats)
+        out.update(self.fragmentation())
+        return out
+
+    def fragmentation(self) -> dict:
+        reserved = len(self.active) * self.max_seq
+        used = sum(s.pos for s in self.active.values())
+        return {"reserved_positions": reserved, "used_positions": used,
+                "frag_positions": reserved - used}
 
     def has_free(self) -> bool:
         return bool(self._free)
@@ -61,25 +97,33 @@ class SlotManager:
                 f"cache rows hold {self.max_seq}")
         return request
 
-    def admit(self, request: Request, first_token: int) -> Slot:
-        """Claim a row for ``request`` whose prefill emitted ``first_token``."""
+    def admit(self, request: Request, first_token: int, *,
+              blocks: list[int] | None = None,
+              tokens: list[int] | None = None,
+              pos: int | None = None) -> Slot:
+        """Claim a row for ``request`` whose prefill emitted ``first_token``.
+        ``tokens``/``pos`` override the fresh-admission defaults when a
+        preempted request resumes with generation already under way."""
         if not self._free:
             raise RuntimeError("no free slot")
         self.validate(request)
         idx = self._free.pop()
-        slot = Slot(index=idx, request=request, pos=request.prompt_len,
-                    last_token=first_token, tokens=[first_token])
+        slot = Slot(index=idx, request=request,
+                    pos=request.prompt_len if pos is None else pos,
+                    last_token=first_token,
+                    tokens=[first_token] if tokens is None else list(tokens),
+                    blocks=blocks or [], seq=next(self._seq))
         self.active[idx] = slot
         self.slot_uses[idx] += 1
-        self.stats["admitted"] += 1
-        self.stats["peak_active"] = max(self.stats["peak_active"],
-                                        len(self.active))
+        self._stats["admitted"] += 1
+        self._stats["peak_active"] = max(self._stats["peak_active"],
+                                         len(self.active))
         return slot
 
     def release(self, slot: Slot) -> None:
         del self.active[slot.index]
         self._free.append(slot.index)
-        self.stats["released"] += 1
+        self._stats["released"] += 1
 
     # ------------------------------------------------- per-step vectors
     def token_vector(self) -> np.ndarray:
@@ -91,8 +135,9 @@ class SlotManager:
 
     def index_vector(self) -> np.ndarray:
         """(max_slots,) int32 per-row cache positions.  Inactive rows pin
-        to 0: their junk write lands below any future request's prefill,
-        which overwrites it (see module docstring)."""
+        to 0: their junk write lands below any future request's prefill
+        (dense) or in the reserved junk block 0 (paged), which nothing
+        ever reads (see module docstring)."""
         idx = np.zeros((self.max_slots,), np.int32)
         for i, slot in self.active.items():
             idx[i] = slot.pos
@@ -100,3 +145,131 @@ class SlotManager:
 
     def active_slots(self) -> list[Slot]:
         return [self.active[i] for i in sorted(self.active)]
+
+
+# ------------------------------------------------------------ paged layout
+
+class BlockPool:
+    """Free-list of fixed-size KV blocks.
+
+    Manages physical block ids ``1..num_blocks``; id 0 is the reserved
+    junk block (inactive decode rows write there — never allocated, never
+    read).  The backing cache array therefore has ``num_blocks + 1``
+    physical blocks; ``num_blocks * block_size`` is the usable capacity.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError("need at least one block of one position")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: list[int] = list(range(1, num_blocks + 1))[::-1]
+        self.stats = {"allocated": 0, "freed": 0, "peak_in_use": 0}
+
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self, n: int = 1) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"block pool exhausted: need {n}, have {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        self.stats["allocated"] += n
+        self.stats["peak_in_use"] = max(self.stats["peak_in_use"],
+                                        self.blocks_in_use())
+        return out
+
+    def free(self, blocks: list[int]) -> None:
+        self._free.extend(blocks)
+        self.stats["freed"] += len(blocks)
+
+
+class PagedSlotManager(SlotManager):
+    """SlotManager over a BlockPool instead of full cache rows.
+
+    ``max_seq`` bounds the block-TABLE width (the attention span a slot
+    can reach, ``table_width * block_size`` positions); pass ``None`` to
+    let a single request grow to the whole pool.  Admission and growth
+    are pool-level: a request is admitted when its PROMPT blocks (plus a
+    one-block watermark so in-flight slots can still grow) are free, and
+    decode allocates one block at a time on demand — the engine preempts
+    the youngest slot if the pool runs dry mid-decode.
+    """
+
+    def __init__(self, max_slots: int, block_size: int, num_blocks: int,
+                 max_seq: int | None = None):
+        self.pool = BlockPool(num_blocks, block_size)
+        self.block_size = block_size
+        if max_seq is None:
+            self.table_width = num_blocks
+        else:
+            self.table_width = -(-max_seq // block_size)
+        super().__init__(max_slots, self.table_width * block_size)
+        self._stats["preempted"] = 0
+
+    def blocks_for(self, n_positions: int) -> int:
+        return -(-n_positions // self.block_size)
+
+    def fragmentation(self) -> dict:
+        """Internal fragmentation only: held blocks vs. written positions.
+        (There is no external fragmentation — any free block serves any
+        slot, tables need not be physically contiguous.)"""
+        reserved = self.pool.blocks_in_use() * self.block_size
+        used = sum(s.pos for s in self.active.values())
+        return {"reserved_positions": reserved, "used_positions": used,
+                "frag_positions": reserved - used}
+
+    def validate(self, request: Request) -> Request:
+        """Pool-level bound: the request's worst-case block count must fit
+        the pool and the block table (NOT a per-row max_seq reservation —
+        blocks are only taken as generation actually reaches them)."""
+        total = self.blocks_for(request.prompt_len + request.max_new_tokens)
+        limit = min(self.pool.num_blocks, self.table_width)
+        if total > limit:
+            raise ValueError(
+                f"request {request.req_id} needs {total} blocks "
+                f"({request.prompt_len + request.max_new_tokens} positions "
+                f"/ {self.block_size}), pool+table allow {limit}")
+        return request
+
+    def can_admit(self, prefill_len: int, request: Request) -> bool:
+        """Block-exhaustion backpressure: admit when the prefill's blocks
+        plus a one-block growth watermark are free.  Capped at the
+        request's worst-case total so a pool-sized request is still
+        admissible on an idle pool (no livelock)."""
+        need = min(self.blocks_for(prefill_len) + 1,
+                   self.blocks_for(request.prompt_len
+                                   + request.max_new_tokens))
+        return self.pool.free_blocks() >= need
+
+    def needs_block(self, slot: Slot) -> bool:
+        """True when the next decode write (at ``slot.pos``) falls in a
+        block the slot does not hold yet."""
+        return slot.pos // self.block_size >= len(slot.blocks)
+
+    def release(self, slot: Slot) -> None:
+        super().release(slot)
+        self.pool.free(slot.blocks)
+        slot.blocks = []
+
+    def preempt(self, slot: Slot) -> None:
+        """Release a slot mid-generation (pool pressure).  The engine
+        stashes the generated tokens and requeues the request; resume
+        re-prefills prompt+generated, so greedy output is unchanged."""
+        self.release(slot)
+        self._stats["preempted"] += 1
+        self._stats["admitted"] -= 1     # resume will re-admit
+        self._stats["released"] -= 1
+
+    def block_table(self) -> np.ndarray:
+        """(max_slots, table_width) int32 physical block ids.  Unassigned
+        entries are 0 = the junk block: gathered but always masked (they
+        only cover positions >= the slot's pos), and the only writes that
+        target them are inactive rows' (index 0, table row 0)."""
+        table = np.zeros((self.max_slots, self.table_width), np.int32)
+        for i, slot in self.active.items():
+            table[i, :len(slot.blocks)] = slot.blocks
+        return table

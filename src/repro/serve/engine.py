@@ -30,8 +30,8 @@ from repro.configs.model_config import ModelConfig
 from repro.core.function import MigratableFunction
 from repro.core.runtime import XarTrekRuntime
 from repro.core.targets import TargetKind
-from repro.models.model import Model, build_model
-from repro.serve.batch import Slot, SlotManager
+from repro.models.model import build_model
+from repro.serve.batch import PagedSlotManager, Slot, SlotManager
 from repro.serve.scheduler import Request, RequestQueue
 
 
@@ -147,6 +147,21 @@ class ContinuousBatchingEngine:
     and then advances every in-flight request by one token (one ragged
     decode across all slots, per-row cache positions).
 
+    With ``paged=True`` the dense per-slot rows are replaced by a
+    vLLM-style block pool (``block_size`` positions per block,
+    ``num_blocks`` usable blocks — default: the dense engine's memory
+    footprint).  Admission needs only the prompt's blocks (plus a
+    one-block watermark), decode allocates blocks on demand, and the
+    youngest slot is preempted-and-resumed if the pool runs dry — so
+    concurrency is bounded by tokens actually in flight, not by
+    ``max_slots x max_seq`` reservations.  Greedy tokens are
+    byte-identical to the dense engine when the attention spans match
+    (``ceil(max_seq/block_size)*block_size == max_seq``).
+
+    A request whose ``stop_tokens`` fires finishes that step: its slot —
+    and, under paging, its blocks — frees immediately for queued
+    arrivals instead of idling out the ``max_new_tokens`` budget.
+
     With a ``runtime``, every prefill/decode dispatches through
     ``XarTrekRuntime.call`` under the names ``{fn_prefix}_prefill`` /
     ``{fn_prefix}_decode`` so Algorithm 2 picks the target per step; the
@@ -165,7 +180,9 @@ class ContinuousBatchingEngine:
                  mesh: Optional[jax.sharding.Mesh] = None,
                  params=None, seed: int = 0,
                  runtime: Optional[XarTrekRuntime] = None,
-                 fn_prefix: str = "cb", min_bucket: int = 8):
+                 fn_prefix: str = "cb", min_bucket: int = 8,
+                 paged: bool = False, block_size: int = 32,
+                 num_blocks: Optional[int] = None):
         if cfg.family not in ("dense", "vlm"):
             # ssm/hybrid caches are position-synchronised; moe routing is
             # batch-coupled (capacity = f(batch tokens), so junk tokens
@@ -174,17 +191,50 @@ class ContinuousBatchingEngine:
             raise NotImplementedError(
                 f"continuous batching needs a per-row-seekable KV cache "
                 f"and row-independent math; family {cfg.family!r} is not")
+        if paged and cfg.kv_cache_dtype == "int8":
+            raise NotImplementedError(
+                "paged KV does not support int8 cache quantization yet")
         self.cfg = cfg
         self.model = build_model(cfg, mesh)
         self.mesh = mesh
         self.runtime = runtime
         self.min_bucket = min_bucket
+        self.paged = paged
         if params is None:
             params = self.model.init(jax.random.PRNGKey(seed))
         self.params = params
         self.queue = RequestQueue()
-        self.slots = SlotManager(max_slots, max_seq)
-        self.cache = self.model.init_cache(max_slots, max_seq)
+        if paged:
+            # default pool = the dense engine's memory footprint
+            # (max_slots full rows), but shared: short requests only take
+            # the blocks they reach, so more of them fit concurrently
+            self.block_size = block_size
+            nb = num_blocks or max_slots * (-(-max_seq // block_size))
+            self.slots: SlotManager = PagedSlotManager(
+                max_slots, block_size, nb, max_seq=max_seq)
+            self.cache = self.model.init_paged_cache(nb + 1, block_size)
+            # scatter a prefill's KV blocks into the pool at the slot's
+            # physical block ids (one fused donated update, like the
+            # dense row write below); jit specializes per block count
+            def scatter(pool, part, phys):
+                out = {}
+                for k in pool:
+                    p = part[k][:, 0]               # (L, S_bucket, KV, hd)
+                    tgt = phys.shape[0] * block_size
+                    if p.shape[1] > tgt:            # bucket overhangs
+                        p = p[:, :tgt]
+                    elif p.shape[1] < tgt:          # junk tail: positions
+                        p = jnp.pad(                # >= length are masked
+                            p, ((0, 0), (0, tgt - p.shape[1])) +
+                            ((0, 0),) * (p.ndim - 2))
+                    p = p.reshape(p.shape[0], phys.shape[0], block_size,
+                                  *p.shape[2:])
+                    out[k] = pool[k].at[:, phys].set(p.astype(pool[k].dtype))
+                return out
+            self._scatter = jax.jit(scatter, donate_argnums=(0,))
+        else:
+            self.slots = SlotManager(max_slots, max_seq)
+            self.cache = self.model.init_cache(max_slots, max_seq)
         self._prefill = jax.jit(self.model.prefill_at)
         # donate the cache: without aliasing every token copies the full
         # (L, max_slots, max_seq, KV, hd) stack (see decode_attention)
@@ -203,10 +253,16 @@ class ContinuousBatchingEngine:
         self._prefill_name = f"{fn_prefix}_prefill"
         self._decode_name = f"{fn_prefix}_decode"
         self.results: dict[int, np.ndarray] = {}
-        self.stats = {"prefills": 0, "decode_steps": 0,
-                      "decode_row_util": 0.0}
+        self._resume: dict[int, list[int]] = {}   # req_id -> tokens so far
+        self.reset_stats()
         if runtime is not None:
             self._prepare_runtime(runtime, fn_prefix)
+
+    def reset_stats(self) -> None:
+        """Zero the per-serve counters (benchmarks call this after their
+        warm-up pass so warm-up steps don't pollute measured stats)."""
+        self.stats = {"prefills": 0, "decode_steps": 0,
+                      "decode_row_util": 0.0}
 
     # ------------------------------------------------- runtime plumbing
     def _prepare_runtime(self, rt: XarTrekRuntime, fn_prefix: str) -> None:
@@ -227,11 +283,15 @@ class ContinuousBatchingEngine:
         ex_prefill = (self.params,
                       {"tokens": jnp.zeros((1, self.min_bucket), jnp.int32),
                        "length": jnp.ones((1,), jnp.int32)})
-        ex_decode = (self.params, self.cache,
-                     {"tokens": jnp.zeros((self.slots.max_slots, 1),
-                                          jnp.int32),
-                      "index": jnp.zeros((self.slots.max_slots,),
-                                         jnp.int32)})
+        dec_batch = {"tokens": jnp.zeros((self.slots.max_slots, 1),
+                                         jnp.int32),
+                     "index": jnp.zeros((self.slots.max_slots,), jnp.int32)}
+        if self.paged:
+            # paged decode keys its compile on the block-table shape too;
+            # steady state is one static signature (see binary.shape_key)
+            dec_batch["block_table"] = jnp.zeros(
+                (self.slots.max_slots, self.slots.table_width), jnp.int32)
+        ex_decode = (self.params, self.cache, dec_batch)
         rt.prepare(self._prefill_name, *ex_prefill)
         rt.prepare(self._decode_name, *ex_decode, donate_argnums=(1,))
 
@@ -243,11 +303,31 @@ class ContinuousBatchingEngine:
         return self.queue.submit(self.slots.validate(
             Request(np.asarray(prompt), max_new_tokens, arrival_s)))
 
+    def _can_admit(self, req: Request) -> bool:
+        """Admission capacity beyond a free row: the paged pool must hold
+        the prefill's blocks plus a growth watermark (block-exhaustion
+        backpressure replaces the dense engine's slot-count-only gate)."""
+        if not self.paged:
+            return True
+        resume = self._resume.get(req.req_id)
+        plen = req.prompt_len + (len(resume) - 1 if resume else 0)
+        return self.slots.can_admit(plen, req)
+
     def _admit(self, req: Request) -> None:
-        S = req.prompt_len
+        # resume of a preempted request: the cache must again hold
+        # prompt + generated-so-far, so re-prefill over both; greedy
+        # decoding makes the recomputation bit-compatible with the
+        # original KV (same math, same weights)
+        resume = self._resume.pop(req.req_id, None)
+        if resume is None:
+            feed = req.prompt
+        else:
+            feed = np.concatenate(
+                [req.prompt, np.asarray(resume[:-1], np.int32)])
+        S = len(feed)
         Sb = prompt_bucket(S, self.min_bucket)
         toks = np.zeros((1, Sb), np.int32)
-        toks[0, :S] = req.prompt
+        toks[0, :S] = feed
         batch = {"tokens": jnp.asarray(toks),
                  "length": jnp.full((1,), S, jnp.int32)}
         if self.runtime is not None:
@@ -256,18 +336,33 @@ class ContinuousBatchingEngine:
         else:
             logits, pc = self._prefill(self.params, batch)
         self.stats["prefills"] += 1
-        first = int(np.asarray(jnp.argmax(logits[0, -1])))
-        slot = self.slots.admit(req, first)
-        # write the request's bucketed KV into its cache row (leaves are
-        # (L, 1, S_bucket, KV, hd|1); seq is axis 2).  Positions [S,
-        # S_bucket) carry pad KV, which write-then-attend decode always
-        # overwrites before reading (see batch.py docstring)
-        if Sb > self.slots.max_seq:        # bucket overhangs the row
-            pc = {k: jax.lax.slice_in_dim(pc[k], 0, self.slots.max_seq,
-                                          axis=2) for k in pc}
-        self.cache = self._write_slot(self.cache, pc,
-                                      jnp.int32(slot.index))
-        if slot.done:                      # max_new_tokens == 1
+        if resume is None:
+            first, tokens = int(np.asarray(jnp.argmax(logits[0, -1]))), None
+        else:
+            # the pending token was already sampled before preemption;
+            # the resume prefill only rebuilds the KV (logits unused)
+            first, tokens = resume[-1], resume
+        if self.paged:
+            blocks = self.slots.pool.alloc(self.slots.blocks_for(S))
+            slot = self.slots.admit(req, first, blocks=blocks,
+                                    tokens=tokens, pos=S)
+            # scatter the bucketed prefill KV (leaves (L,1,S_bucket,KV,hd),
+            # seq axis 2) into the slot's physical blocks; the tail of the
+            # last block carries junk KV, which write-then-attend decode
+            # always overwrites before reading (see batch.py docstring)
+            self.cache = self._scatter(self.cache, pc,
+                                       jnp.asarray(blocks, jnp.int32))
+        else:
+            slot = self.slots.admit(req, first, tokens=tokens, pos=S)
+            # write the request's bucketed KV into its cache row (leaves
+            # are (L, 1, S_bucket, KV, hd|1); seq is axis 2).  Positions
+            # [S, S_bucket) carry pad KV, overwritten before any read
+            if Sb > self.slots.max_seq:    # bucket overhangs the row
+                pc = {k: jax.lax.slice_in_dim(pc[k], 0, self.slots.max_seq,
+                                              axis=2) for k in pc}
+            self.cache = self._write_slot(self.cache, pc,
+                                          jnp.int32(slot.index))
+        if slot.done:            # max_new_tokens reached or stop token
             self._finish(slot)
 
     def _finish(self, slot: Slot) -> None:
@@ -275,10 +370,43 @@ class ContinuousBatchingEngine:
         self.slots.release(slot)
 
     # ----------------------------------------------------------- decode
+    def _preempt(self, slot: Slot) -> None:
+        """Evict a live slot to relieve pool pressure: stash its generated
+        tokens, free its blocks, requeue the request at the front.  The
+        resume path re-prefills prompt+generated, so output is unchanged."""
+        self._resume[slot.request.req_id] = list(slot.tokens)
+        self.slots.preempt(slot)
+        self.queue.requeue(slot.request)
+
+    def _ensure_decode_blocks(self) -> None:
+        """Before a paged decode step, every active slot whose next write
+        crosses into a new block must hold one.  Oldest slots allocate
+        first; if the pool runs dry the YOUNGEST other slot is preempted
+        (least work lost).  Forward progress is guaranteed: a lone slot's
+        worst-case block count fits the pool (validate()), so its growth
+        can always be satisfied once neighbours are evicted."""
+        for slot in sorted(self.slots.active.values(), key=lambda s: s.seq):
+            if self.slots.active.get(slot.index) is not slot:
+                continue                   # preempted earlier this pass
+            if not self.slots.needs_block(slot):
+                continue
+            while not self.slots.pool.free_blocks():
+                victims = [s for s in self.slots.active.values()
+                           if s is not slot]
+                assert victims, "validate() bounds a lone slot to the pool"
+                self._preempt(max(victims, key=lambda s: s.seq))
+            slot.blocks.extend(self.slots.pool.alloc(1))
+
     def _decode_step(self) -> None:
+        if self.paged:
+            self._ensure_decode_blocks()
         active = self.slots.active_slots()
+        if not active:                     # everything was preempted
+            return
         batch = {"tokens": jnp.asarray(self.slots.token_vector()),
                  "index": jnp.asarray(self.slots.index_vector())}
+        if self.paged:
+            batch["block_table"] = jnp.asarray(self.slots.block_table())
         if self.runtime is not None:
             logits, self.cache = self.runtime.call(
                 self._decode_name, self.params, self.cache, batch)
@@ -312,6 +440,11 @@ class ContinuousBatchingEngine:
                 req = self.queue.pop_arrived(now)
                 if req is None:
                     break
+                if not self._can_admit(req):
+                    # block-exhaustion backpressure: head-of-queue waits
+                    # (front of its arrival cohort) for blocks to free
+                    self.queue.requeue(req)
+                    break
                 self._admit(req)
             if self.slots.active:
                 self._decode_step()
@@ -325,7 +458,8 @@ class ContinuousBatchingEngine:
 
     def generate(self, prompts, max_new_tokens: int = 16) -> np.ndarray:
         """ServeEngine.generate-compatible convenience: all prompts
-        arrive at t=0; returns (B, max_new_tokens) tokens in order."""
+        arrive at t=0; returns (B, max_new_tokens) tokens in order.
+        (Stop-token requests can return ragged lengths — use serve().)"""
         reqs = [Request(np.asarray(p), max_new_tokens)
                 for p in np.asarray(prompts)]
         out = self.serve(reqs)

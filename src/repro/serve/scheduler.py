@@ -24,11 +24,18 @@ import numpy as np
 
 @dataclasses.dataclass
 class Request:
-    """One generation job.  ``prompt``: (S,) int32 token ids."""
+    """One generation job.  ``prompt``: (S,) int32 token ids.
+
+    ``stop_tokens``: generation ends the step any of these ids is
+    emitted (the stop token is included in the output), freeing the
+    request's slot — and, under paging, its KV blocks — immediately
+    instead of running out the full ``max_new_tokens`` budget.
+    """
 
     prompt: np.ndarray
     max_new_tokens: int = 16
     arrival_s: float = 0.0
+    stop_tokens: tuple = ()
     req_id: int = dataclasses.field(
         default_factory=itertools.count().__next__)
 
@@ -38,10 +45,14 @@ class Request:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        self.stop_tokens = tuple(int(t) for t in (self.stop_tokens or ()))
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    def stops(self, token: int) -> bool:
+        return token in self.stop_tokens
 
 
 class RequestQueue:
@@ -51,6 +62,7 @@ class RequestQueue:
         self._lock = threading.Lock()
         self._heap: list[tuple[float, int, Request]] = []
         self._seq = itertools.count()     # FIFO tie-break among same-time
+        self._front = itertools.count(start=-1, step=-1)
         for r in requests:
             self.submit(r)
 
@@ -58,6 +70,16 @@ class RequestQueue:
         with self._lock:
             heapq.heappush(self._heap,
                            (request.arrival_s, next(self._seq), request))
+        return request.req_id
+
+    def requeue(self, request: Request) -> int:
+        """Put a popped request back at the FRONT of its arrival cohort
+        (engine backpressure: admission was attempted but capacity — e.g.
+        the KV block pool — was not available, or the request was
+        preempted and must resume before newer work)."""
+        with self._lock:
+            heapq.heappush(self._heap,
+                           (request.arrival_s, next(self._front), request))
         return request.req_id
 
     def pop_arrived(self, now: float) -> Optional[Request]:

@@ -8,8 +8,7 @@ the cross-pod reduction runs in a partially-manual shard_map over the
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +17,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.model_config import TrainConfig
 from repro.models.model import Model
 from repro.optim.adamw import AdamW, cosine_schedule
-from repro.parallel.mesh import POD_AXIS
 from repro.parallel.sharding import named_tree
 
 

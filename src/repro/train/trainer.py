@@ -14,10 +14,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.model_config import ModelConfig, ShapeConfig, TrainConfig
@@ -25,7 +24,7 @@ from repro.core.function import FunctionRegistry, MigratableFunction
 from repro.core.runtime import XarTrekRuntime
 from repro.core.targets import TargetKind
 from repro.data.pipeline import SyntheticPipeline
-from repro.models.model import Model, build_model
+from repro.models.model import build_model
 from repro.train.step import (init_train_state, make_train_step,
                               train_step_shardings)
 

@@ -1,6 +1,5 @@
 """Per-architecture smoke tests: reduced config, one train/prefill/decode
 step on CPU, asserting output shapes and finiteness (assignment f)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ kernel bank, estimator, simulator reproduction of the paper's claims."""
 import copy
 import math
 import random
-import time
 
 import pytest
 

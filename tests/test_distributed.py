@@ -1,6 +1,5 @@
 """Multi-device tests: run in subprocesses with forced host device counts
 so the main test process keeps its single real device."""
-import json
 import os
 import subprocess
 import sys

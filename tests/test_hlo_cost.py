@@ -1,10 +1,9 @@
 """The trip-count-aware HLO cost analyzer vs known-flop programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.launch.hlo_cost import HloProgram, analyze
+from repro.launch.hlo_cost import analyze
 
 D = 128
 

@@ -11,7 +11,6 @@ from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention as fa_raw
 from repro.kernels.knn_digits import hamming_distances
 from repro.kernels.moe_gmm import grouped_matmul as gmm_raw
-from repro.kernels.rmsnorm import rmsnorm as rms_raw
 from repro.kernels.ssd_scan import ssd_scan as ssd_raw
 
 

@@ -133,11 +133,9 @@ def test_cosine_schedule_shape():
 
 
 def test_zero1_specs_shard_data_axis():
-    from repro.parallel.sharding import DEFAULT_RULES
     model = build_model(ARCHS["yi-6b"], mesh=None)
     opt = AdamW(TrainConfig(zero1=True))
     specs = opt.state_specs(model.specs(), model.shapes(), dp_size=16)
-    flat = jax.tree.leaves(specs["m"], is_leaf=lambda x: hasattr(x, "index"))
     from jax.sharding import PartitionSpec
     leaves = jax.tree.leaves(specs["m"],
                              is_leaf=lambda x: isinstance(x, PartitionSpec))
