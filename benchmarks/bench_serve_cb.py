@@ -13,7 +13,16 @@ budgets) served three ways on the same model and weights:
     same engine
     over a shared block pool at the SAME KV memory as the dense cache,
     with twice the decode rows: short requests stop reserving full rows,
-    so more of them run concurrently.
+    so more of them run concurrently;
+  * ACCEL-backend paged serving (``--no-accel`` skips it) — every step
+    on the Pallas kernels (interpret mode on CPU runners), proving the
+    ACCEL build serves real tokens;
+  * forced-migration serving — the same stream through an XarTrekRuntime
+    under a forced HOST -> ACCEL -> HOST schedule flipped mid-stream, so
+    the artifact records per-target call counts, per-backend decode step
+    times (the asymmetry Algorithm 2 can exploit) and the migration
+    count.  ``--json`` embeds ``XarTrekRuntime.summary()`` so CI can see
+    which backend actually served tokens.
 
 Emits ``serve_cb/*`` rows; derived carries tok/s for each engine, the
 continuous/synchronous throughput ratio, and the paged engine's peak
@@ -39,6 +48,8 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import ARCHS, reduced
+from repro.core.function import FunctionRegistry
+from repro.core.runtime import XarTrekRuntime
 from repro.serve import ContinuousBatchingEngine, Request, ServeEngine
 from repro.serve.scheduler import RequestQueue, poisson_arrivals
 
@@ -47,6 +58,10 @@ MAX_SEQ = 96
 PAD_TO = 32            # static batching pads every prompt to this width
 BLOCK_SIZE = 32        # paged engine's KV block width
 SEED = 0
+# forced-migration schedule: decode-step counts at which the scheduler
+# policy flips HOST -> ACCEL and back (well inside even the CI smoke
+# stream, whose longest request decodes ~15+ steps)
+MIGRATE_AT = (4, 10)
 
 
 def make_requests(vocab: int, n: int, rate: float,
@@ -119,6 +134,8 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=SEED)
     ap.add_argument("--no-paged", action="store_true",
                     help="skip the paged-engine run")
+    ap.add_argument("--no-accel", action="store_true",
+                    help="skip the ACCEL-backend and forced-migration runs")
     ap.add_argument("--json", metavar="PATH",
                     help="write results as JSON (CI artifact)")
     ap.add_argument("--check-floor", metavar="PATH",
@@ -172,6 +189,62 @@ def main(argv=None) -> int:
             "paged_vs_dense_cb": (tokens / t_paged) / (tokens / t_cb),
         })
 
+    t_accel = t_mig = None
+    if not args.no_accel:
+        # every step on the Pallas kernels (interpret mode on CPU)
+        accel = ContinuousBatchingEngine(
+            cfg, max_slots=2 * MAX_SLOTS, max_seq=MAX_SEQ,
+            params=sync.params, paged=True, block_size=BLOCK_SIZE,
+            num_blocks=MAX_SLOTS * MAX_SEQ // BLOCK_SIZE, fn_prefix="acb",
+            backend="accel")
+        warm(accel, cfg.vocab_size)
+        t_accel = serve_continuous(accel,
+                                   [dataclasses.replace(r) for r in reqs])
+        results["accel_cb_tok_s"] = tokens / t_accel
+
+        # forced HOST -> ACCEL -> HOST schedule through the runtime,
+        # flipped mid-stream while slots are live: Algorithm 2's target
+        # choice becomes a real kernel swap
+        rt = XarTrekRuntime(registry=FunctionRegistry(),
+                            policy="always_host")
+        mig = ContinuousBatchingEngine(
+            cfg, max_slots=2 * MAX_SLOTS, max_seq=MAX_SEQ,
+            params=sync.params, paged=True, block_size=BLOCK_SIZE,
+            num_blocks=MAX_SLOTS * MAX_SEQ // BLOCK_SIZE, fn_prefix="mig",
+            runtime=rt)
+        warm(mig, cfg.vocab_size)
+        rt.call_log.clear()                   # timed region only
+
+        def flip(engine):
+            s = engine.stats["decode_steps"]
+            if s == MIGRATE_AT[0]:
+                rt.server.policy = "always_accel"
+            elif s == MIGRATE_AT[1]:
+                rt.server.policy = "always_host"
+
+        mig.on_step = flip
+        t_mig = serve_continuous(mig, [dataclasses.replace(r)
+                                       for r in reqs])
+        summary = rt.summary()
+        decode_fn = summary["per_function"]["mig_decode"]
+        step_ms = {"host": [], "accel": []}
+        for rec in rt.call_log:
+            if rec["fn"] == "mig_decode":
+                step_ms[rec["target"]].append(rec["ms"])
+        results.update({
+            "mig_tok_s": tokens / t_mig,
+            "mig_host_decode_calls": decode_fn["calls"].get("host", 0),
+            "mig_accel_decode_calls": decode_fn["calls"].get("accel", 0),
+            "mig_migrations": decode_fn["migrations"],
+            # per-backend decode step time: the perf asymmetry the
+            # scheduling policy can exploit (Fig. 6's lever)
+            "mig_host_decode_ms": float(np.mean(step_ms["host"]))
+            if step_ms["host"] else None,
+            "mig_accel_decode_ms": float(np.mean(step_ms["accel"]))
+            if step_ms["accel"] else None,
+            "runtime_summary": summary,
+        })
+
     util = cb.stats["decode_row_util"] / max(cb.stats["decode_steps"], 1)
     emit("serve_cb/sync", t_sync * 1e6 / tokens,
          f"{results['sync_tok_s']:.1f}tok/s")
@@ -185,6 +258,18 @@ def main(argv=None) -> int:
              f"peak_slots={results['paged_peak_active']}"
              f"(dense={results['cb_peak_active']}) "
              f"preempted={results['paged_preempted']}")
+    if t_accel is not None:
+        emit("serve_cb/accel", t_accel * 1e6 / tokens,
+             f"{results['accel_cb_tok_s']:.1f}tok/s pallas")
+        hd_ms = results["mig_host_decode_ms"]
+        ad_ms = results["mig_accel_decode_ms"]
+        emit("serve_cb/migration", t_mig * 1e6 / tokens,
+             f"{results['mig_tok_s']:.1f}tok/s "
+             f"host={results['mig_host_decode_calls']}x"
+             f"{'' if hd_ms is None else f'{hd_ms:.1f}ms'} "
+             f"accel={results['mig_accel_decode_calls']}x"
+             f"{'' if ad_ms is None else f'{ad_ms:.1f}ms'} "
+             f"migrations={results['mig_migrations']}")
 
     if args.json:
         with open(args.json, "w") as f:

@@ -3,13 +3,21 @@ Fig-6 scenario on real JAX functions).
 
 A reduced model serves a ragged Poisson arrival stream through the
 ``ContinuousBatchingEngine``; every prefill/decode step dispatches
-through the Xar-Trek runtime.  The engine registers HOST and ACCEL
-variants of its step functions; the scheduler watches the synthetic
-host load, pre-configures the ACCEL variant asynchronously at startup,
-and migrates decode steps when the load crosses the threshold.
+through the Xar-Trek runtime.  The engine registers genuinely different
+builds of its step functions — HOST on the XLA reference math, ACCEL on
+the Pallas kernels (flash prefill, paged/flash decode) — so a migration
+is a real kernel swap.  The scheduler watches the synthetic host load,
+pre-configures the ACCEL variant asynchronously at startup, and
+migrates decode steps when the load crosses the threshold.
 
-    PYTHONPATH=src python examples/migration_serve.py
+    PYTHONPATH=src python examples/migration_serve.py [--backend auto]
+
+``--backend`` pins the schedule instead of letting Algorithm 2 decide:
+``host`` serves everything on the XLA build, ``accel`` everything on
+the Pallas build, ``auto`` (default) reproduces the load-driven
+migration above.
 """
+import argparse
 import time
 
 import numpy as np
@@ -30,18 +38,32 @@ def make_stream(vocab: int, n: int, rate_per_s: float, seed: int = 0):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", choices=("host", "accel", "auto"),
+                    default="auto",
+                    help="pin every step to one build, or let the "
+                         "scheduler migrate (auto)")
+    args = ap.parse_args()
+
     cfg = reduced(ARCHS["smollm-135m"])
-    rt = XarTrekRuntime(registry=FunctionRegistry(),
-                        min_reconfig_seconds=1.0)
+    policy = {"host": "always_host", "accel": "always_accel",
+              "auto": "xartrek"}[args.backend]
+    rt = XarTrekRuntime(registry=FunctionRegistry(), policy=policy,
+                        min_reconfig_seconds=1.0 if args.backend == "auto"
+                        else 0.0)
+    # auto keeps the paper's asynchronous FPGA pre-configuration (the
+    # latency-hiding demo below); only accel-pinned runs compile the
+    # ACCEL build eagerly (host-pinned never calls it — don't stall on it)
     engine = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=96,
-                                      runtime=rt, seed=0)
+                                      runtime=rt, seed=0,
+                                      eager_accel=args.backend == "accel")
     # threshold row for the decode step: ACCEL profitable under load
     row = rt.table.row("cb_decode")
     row.fpga_thr, row.arm_thr = 2.5, 1e9
 
     phases = [("low load", 0), ("high load", 6)]
     for pi, (phase, synthetic_load) in enumerate(phases):
-        if pi == 1:
+        if pi == 1 and args.backend == "auto":
             # lull between phases: the asynchronous "reconfiguration"
             # (ACCEL compile) completes while traffic is elsewhere —
             # the paper's latency-hiding behaviour

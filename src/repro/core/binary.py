@@ -71,6 +71,9 @@ class MultiTargetBinary:
         self._shape_cache: dict[TargetKind,
                                 OrderedDict[tuple, CompiledVariant]] = {}
         self.shape_stats = {"hits": 0, "misses": 0, "evictions": 0}
+        # per-target compile accounting (default + shape-bucket compiles),
+        # surfaced by XarTrekRuntime.summary()
+        self.compile_stats: dict[TargetKind, dict] = {}
 
     def _jit(self, kind: TargetKind):
         if kind not in self._jitted:
@@ -101,6 +104,10 @@ class MultiTargetBinary:
             bytes_acc = float(cost.get("bytes accessed", 0.0))
         except Exception:
             pass
+        cs = self.compile_stats.setdefault(
+            kind, {"compiles": 0, "compile_seconds": 0.0})
+        cs["compiles"] += 1
+        cs["compile_seconds"] += dt
         return CompiledVariant(kind=kind, compiled=compiled,
                                compile_seconds=dt, flops=flops,
                                bytes_accessed=bytes_acc)

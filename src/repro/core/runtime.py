@@ -54,9 +54,13 @@ class XarTrekRuntime:
     # ----------------------------------------------------------- prepare
     def prepare(self, fn_name: str, *example_args,
                 table_row: Optional[dict] = None,
-                donate_argnums: tuple = ()) -> None:
+                donate_argnums: tuple = (),
+                eager_accel: bool = False) -> None:
         """main()-start instrumentation: compile HOST now, pre-configure
-        ACCEL asynchronously, seed thresholds.  ``donate_argnums`` lets
+        ACCEL (asynchronously by default; ``eager_accel=True`` blocks
+        until the ACCEL build is bank-resident, so the first migration
+        never pays compile time inside the timed region — the serve
+        engine's choice), seed thresholds.  ``donate_argnums`` lets
         state-carrying callers (serve decode's KV cache) alias in place."""
         fn = self.registry.get(fn_name)
         fn.check_abi(example_args)
@@ -75,7 +79,10 @@ class XarTrekRuntime:
             for k, v in table_row.items():
                 setattr(row, k, v)
         if TargetKind.ACCEL in fn.variants:
-            self.bank.load_async(fn_name)   # pre-configuration
+            if eager_accel:
+                self.bank.load_sync(fn_name)
+            else:
+                self.bank.load_async(fn_name)   # pre-configuration
 
     def _load_accel(self, fn_name: str):
         binary = self.binaries[fn_name]
@@ -132,10 +139,38 @@ class XarTrekRuntime:
 
     # ------------------------------------------------------------- stats
     def summary(self) -> dict:
+        """Aggregate call/compile/migration accounting.
+
+        ``per_function[fn]`` reports, per target, how many calls that
+        variant actually served and how many compiles it cost (default
+        + shape-bucket), plus how many times consecutive calls of ``fn``
+        switched target (= run-time migrations) — so a benchmark artifact
+        can prove which backend served tokens, not just which was
+        registered.
+        """
         per_target = {k.value: 0 for k in TargetKind}
+        per_fn_calls: dict[str, dict[str, int]] = {}
+        migrations: dict[str, int] = {}
+        last: dict[str, str] = {}
         for rec in self.call_log:
             per_target[rec["target"]] += 1
+            d = per_fn_calls.setdefault(rec["fn"], {})
+            d[rec["target"]] = d.get(rec["target"], 0) + 1
+            prev = last.get(rec["fn"])
+            if prev is not None and prev != rec["target"]:
+                migrations[rec["fn"]] = migrations.get(rec["fn"], 0) + 1
+            last[rec["fn"]] = rec["target"]
+        per_function = {}
+        for name, binary in self.binaries.items():
+            per_function[name] = {
+                "calls": per_fn_calls.get(name, {}),
+                "compiles": {k.value: dict(v)
+                             for k, v in binary.compile_stats.items()},
+                "migrations": migrations.get(name, 0),
+            }
         return {"calls": len(self.call_log), "per_target": per_target,
+                "per_function": per_function,
+                "migrations": sum(migrations.values()),
                 "bank": dict(self.bank.stats),
                 "shape_buckets": {name: dict(b.shape_stats)
                                   for name, b in self.binaries.items()

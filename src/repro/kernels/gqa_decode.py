@@ -1,10 +1,21 @@
-"""Single-token decode attention over a long KV cache — Pallas TPU kernel.
+"""Single-token decode attention over a long KV cache — Pallas TPU kernels.
 
-Flash-decoding style: grid ``(batch*heads, kv_blocks)`` streams the
-cache through VMEM with online-softmax accumulators in scratch (one
-q-row per program), masked at the live length.  This is the ACCEL
-variant of the decode hot function (the serve-path analogue of the
-paper's hardware kernel); oracle: ``ref.decode_attention_ref``.
+Flash-decoding style: ``gqa_decode`` (grid ``(batch*heads, kv_blocks)``)
+streams a dense cache through VMEM with online-softmax accumulators in
+scratch (one q-row per program), masked at the live length.
+
+``paged_gqa_decode`` is the block-table-aware variant for the paged
+(vLLM-style) KV pool: the block table and per-row live lengths ride in
+as scalar-prefetch operands, so each grid step's BlockSpec index map
+dereferences ``table[b, j]`` and DMAs that PHYSICAL block from the pool
+— the kernel walks a row's blocks in logical order without ever
+materialising the gathered per-row cache.  The current token's K/V is
+passed explicitly and folded into the online softmax on the final block
+(write-then-attend: the pool contributes positions ``< length`` only).
+
+These are the ACCEL variants of the decode hot function (the serve-path
+analogue of the paper's hardware kernel); oracles:
+``ref.decode_attention_ref`` / ``ref.paged_decode_attention_ref``.
 """
 from __future__ import annotations
 
@@ -57,7 +68,8 @@ def _decode_kernel(q_ref, k_ref, v_ref, idx_ref, o_ref, m_scr, l_scr,
 def gqa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                index: jax.Array, *, block_k: int = 512,
                interpret: bool = False) -> jax.Array:
-    """q: (BH, 1, hd); k_cache/v_cache: (BH, Smax, hd); index: () int32.
+    """q: (BH, 1, hd); k_cache/v_cache: (BH, Smax, hd); index: () int32
+    shared position or (BH,) per-row positions.
 
     Attends over cache positions [0, index].  BH = batch * q-heads with
     the cache already head-expanded by the ops wrapper.
@@ -71,7 +83,12 @@ def gqa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
     kernel = functools.partial(_decode_kernel, block_k=block_k,
                                kv_blocks=nk, scale=scale)
-    idx = jnp.broadcast_to(index.astype(jnp.int32), (1,))
+    if index.ndim:                      # ragged: one live length per row
+        idx = index.astype(jnp.int32)
+        idx_spec = pl.BlockSpec((1,), lambda b, ki: (b,))
+    else:
+        idx = jnp.broadcast_to(index.astype(jnp.int32), (1,))
+        idx_spec = pl.BlockSpec((1,), lambda b, ki: (0,))
     return pl.pallas_call(
         kernel,
         grid=(BH, nk),
@@ -79,7 +96,7 @@ def gqa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             pl.BlockSpec((1, 1, hd), lambda b, ki: (b, 0, 0)),
             pl.BlockSpec((1, block_k, hd), lambda b, ki: (b, ki, 0)),
             pl.BlockSpec((1, block_k, hd), lambda b, ki: (b, ki, 0)),
-            pl.BlockSpec((1,), lambda b, ki: (0,)),
+            idx_spec,
         ],
         out_specs=pl.BlockSpec((1, 1, hd), lambda b, ki: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, 1, hd), q.dtype),
@@ -90,3 +107,108 @@ def gqa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         ],
         interpret=interpret,
     )(q, k_cache, v_cache, idx)
+
+
+# ------------------------------------------------------------ paged variant
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *, block_size: int,
+                  nbt: int, scale: float):
+    """One (row, kv-head, logical-block) grid step.
+
+    The BlockSpec index map already resolved ``tbl_ref[b, j]`` to the
+    physical block, so ``k_ref``/``v_ref`` hold that block's
+    (block_size, hd) plane; the kernel only masks and accumulates.
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    live = len_ref[b]                                 # pool valid on [0, live)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    s = jnp.where(kpos < live, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == nbt - 1)
+    def _finish():
+        # fold the current token (position ``live``, not yet in the pool)
+        kn = kn_ref[0, 0].astype(jnp.float32)         # (1, hd)
+        vn = vn_ref[0, 0].astype(jnp.float32)
+        s_cur = jax.lax.dot_general(q, kn, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+        m_prev = m_scr[...]
+        m_fin = jnp.maximum(m_prev, s_cur)
+        corr = jnp.exp(m_prev - m_fin)
+        p_cur = jnp.exp(s_cur - m_fin)
+        l_fin = l_scr[...] * corr + p_cur
+        acc = acc_scr[...] * corr + p_cur * vn
+        o_ref[0, 0] = (acc / jnp.maximum(l_fin, 1e-20)).astype(o_ref.dtype)
+
+
+def paged_gqa_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     k_new: jax.Array, v_new: jax.Array, tables: jax.Array,
+                     lengths: jax.Array, *, interpret: bool = False
+                     ) -> jax.Array:
+    """q: (B, KV, G, hd) query heads grouped per kv head;
+    k_pages/v_pages: (NP, BS, KV, hd) physical block pool;
+    k_new/v_new: (B, KV, 1, hd) current token; tables: (B, NBT) int32
+    physical block ids; lengths: (B,) int32 valid pool positions.
+
+    Attends over pool positions [0, lengths[b]) plus the explicit
+    current token.  Rows with length 0 reduce to softmax over the new
+    token alone (out = v_new), so inactive serve rows are well-defined.
+    """
+    B, KV, G, hd = q.shape
+    block_size = k_pages.shape[1]
+    nbt = tables.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(_paged_kernel, block_size=block_size,
+                               nbt=nbt, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                # tables, lengths
+        grid=(B, KV, nbt),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, t, n: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_size, 1, hd),
+                         lambda b, h, j, t, n: (t[b, j], 0, h, 0)),
+            pl.BlockSpec((1, block_size, 1, hd),
+                         lambda b, h, j, t, n: (t[b, j], 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, j, t, n: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, j, t, n: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, t, n: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages, k_new, v_new)

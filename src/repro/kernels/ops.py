@@ -1,14 +1,24 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-On TPU the kernels compile natively; on this CPU-only container they
-execute in ``interpret=True`` mode (Python evaluation of the kernel
-body) for correctness validation.  The wrappers also do the model-facing
-plumbing: GQA head expansion, head_dim padding to MXU lanes, flattening
+On TPU the kernels compile natively; on CPU-only hosts (CI runners,
+this container) they execute in ``interpret=True`` mode (Python
+evaluation of the kernel body) for correctness validation.  Every
+wrapper derives its default ``interpret=`` from backend detection
+(``on_tpu()``), overridable via ``REPRO_PALLAS_INTERPRET``:
+
+  * unset / ``auto`` — interpret unless running on TPU (the default);
+  * ``1`` / ``true``  — force interpret mode everywhere;
+  * ``0`` / ``false`` — force native compilation (debugging lowering
+    on CPU, or pinning native mode on TPU).
+
+The wrappers also do the model-facing plumbing: GQA head expansion /
+grouping, head_dim padding to MXU lanes, flattening
 (B, S, H, hd) <-> (BH, S, hd).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -22,15 +32,38 @@ from repro.kernels import moe_gmm as _gmm
 from repro.kernels import rmsnorm as _rms
 from repro.kernels import ssd_scan as _ssd
 
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
 def _interpret(flag) -> bool:
-    if flag is None:
-        return not on_tpu()
-    return flag
+    if flag is not None:
+        return flag
+    env = os.environ.get(INTERPRET_ENV, "").strip().lower()
+    if env in ("1", "true", "on", "yes"):
+        return True
+    if env in ("0", "false", "off", "no"):
+        return False
+    return not on_tpu()
+
+
+def _with_env_interpret(jitted):
+    """Resolve the ``interpret`` default BEFORE jit dispatch.
+
+    ``interpret`` is a static argname on every wrapper, so it must reach
+    the jit boundary as a concrete bool: resolving the env/backend
+    default inside the traced body would bake the first resolution into
+    the cached executable and silently ignore a later
+    ``REPRO_PALLAS_INTERPRET`` change (the cache keys on the static
+    ``None``, not on the resolved value).
+    """
+    @functools.wraps(jitted)
+    def call(*args, interpret=None, **kwargs):
+        return jitted(*args, interpret=_interpret(interpret), **kwargs)
+    return call
 
 
 def _pad_lanes(x: jax.Array, axis: int, multiple: int = 128) -> jax.Array:
@@ -43,6 +76,7 @@ def _pad_lanes(x: jax.Array, axis: int, multiple: int = 128) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+@_with_env_interpret
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "interpret", "kv_index"))
 def flash_attention(q, k, v, *, kv_index: tuple | None = None,
@@ -64,11 +98,12 @@ def flash_attention(q, k, v, *, kv_index: tuple | None = None,
     scale_fix = jnp.asarray(np.sqrt(qf.shape[-1] / hd), qf.dtype)
     out = _fa.flash_attention(qf * scale_fix, kf, vf, causal=causal,
                               block_q=block_q, block_k=block_k,
-                              interpret=_interpret(interpret))
+                              interpret=interpret)
     out = out[..., :hd].reshape(B, Hp, S, hd).transpose(0, 2, 1, 3)
     return out
 
 
+@_with_env_interpret
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256,
              interpret: bool | None = None):
@@ -84,11 +119,12 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256,
     Bf = jnp.broadcast_to(Bm[:, None], (B, H, S, N)).reshape(B * H, S, N)
     Cf = jnp.broadcast_to(Cm[:, None], (B, H, S, N)).reshape(B * H, S, N)
     y, state = _ssd.ssd_scan(xf, dtf, Af, Bf, Cf, chunk=chunk,
-                             interpret=_interpret(interpret))
+                             interpret=interpret)
     y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
     return y, state.reshape(B, H, P, N)
 
 
+@_with_env_interpret
 @functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
                                              "interpret"))
 def grouped_matmul(x, w, group_sizes, *, block_c: int = 128,
@@ -96,9 +132,10 @@ def grouped_matmul(x, w, group_sizes, *, block_c: int = 128,
                    interpret: bool | None = None):
     return _gmm.grouped_matmul(x, w, group_sizes, block_c=block_c,
                                block_f=block_f, block_d=block_d,
-                               interpret=_interpret(interpret))
+                               interpret=interpret)
 
 
+@_with_env_interpret
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
 def rmsnorm(x, w, *, eps: float = 1e-5, block_rows: int = 128,
             interpret: bool | None = None):
@@ -110,10 +147,11 @@ def rmsnorm(x, w, *, eps: float = 1e-5, block_rows: int = 128,
     while R % br:
         br //= 2
     out = _rms.rmsnorm(flat, w, eps=eps, block_rows=max(br, 1),
-                       interpret=_interpret(interpret))
+                       interpret=interpret)
     return out.reshape(shape)
 
 
+@_with_env_interpret
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def knn_digits(test, train, train_labels, *, k: int = 3,
                interpret: bool | None = None):
@@ -122,36 +160,147 @@ def knn_digits(test, train, train_labels, *, k: int = 3,
     test: (Nt, W) uint32; train: (Nn, W) uint32; train_labels: (Nn,) int32.
     Returns predicted labels (Nt,) int32.
     """
-    d = _knn.hamming_distances(test, train, interpret=_interpret(interpret))
+    d = _knn.hamming_distances(test, train, interpret=interpret)
     _, idx = jax.lax.top_k(-d, k)                     # k smallest distances
     votes = train_labels[idx]                          # (Nt, k)
     counts = jax.vmap(lambda v: jnp.bincount(v, length=10))(votes)
     return jnp.argmax(counts, axis=-1).astype(jnp.int32)
 
 
+@_with_env_interpret
 @functools.partial(jax.jit, static_argnames=("win", "stride", "interpret"))
 def window_scores(img, feats, *, win: int = 24, stride: int = 4,
                   interpret: bool | None = None):
     return _hw.window_scores(img, feats, win=win, stride=stride,
-                             interpret=_interpret(interpret))
+                             interpret=interpret)
 
 
+@_with_env_interpret
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret",
                                              "kv_index"))
 def gqa_decode(q, k_cache, v_cache, index, *, kv_index: tuple | None = None,
                block_k: int = 512, interpret: bool | None = None):
     """Model-facing decode attention.  q: (B,1,Hp,hd);
-    k_cache/v_cache: (B,Smax,KV,hd); index: () int32."""
+    k_cache/v_cache: (B,Smax,KV,hd); index: () int32 shared position or
+    (B,)/(B,1,1,1) ragged per-row positions (attends [0, index])."""
     B, _, Hp, hd = q.shape
     Smax = k_cache.shape[1]
     if kv_index is not None:
         idx = np.asarray(kv_index)
         k_cache = k_cache[:, :, idx, :]
         v_cache = v_cache[:, :, idx, :]
-    qf = _pad_lanes(q.transpose(0, 2, 1, 3).reshape(B * Hp, 1, hd), -1)
-    kf = _pad_lanes(k_cache.transpose(0, 2, 1, 3).reshape(B * Hp, Smax, hd), -1)
-    vf = _pad_lanes(v_cache.transpose(0, 2, 1, 3).reshape(B * Hp, Smax, hd), -1)
-    scale_fix = jnp.asarray(np.sqrt(qf.shape[-1] / hd), qf.dtype)
-    out = _gd.gqa_decode(qf * scale_fix, kf, vf, index, block_k=block_k,
-                         interpret=_interpret(interpret))
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hp, 1, hd)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * Hp, Smax, hd)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * Hp, Smax, hd)
+    if not interpret and hd % 128:
+        # native TPU lanes only: interpret mode (CI) skips the
+        # full-cache pad copy, like the paged path below
+        qf, kf, vf = (_pad_lanes(a, -1) for a in (qf, kf, vf))
+        qf = qf * jnp.asarray(np.sqrt(qf.shape[-1] / hd), qf.dtype)
+    if index.ndim:                      # per-row -> per-(row, head)
+        index = jnp.repeat(index.astype(jnp.int32).reshape(B), Hp)
+    out = _gd.gqa_decode(qf, kf, vf, index, block_k=block_k,
+                         interpret=interpret)
     return out[..., :hd].reshape(B, Hp, 1, hd).transpose(0, 2, 1, 3)
+
+
+# --------------------------------------------------- paged / ragged decode
+
+def _kv_grouping(Hp: int, KV: int, kv_index: tuple | None):
+    """Static grouping of query heads by the kv head they attend.
+
+    Returns (kvmap, pos, qhead_for, G): query head h reads kv head
+    ``kvmap[h]`` at group rank ``pos[h]``; group slot (kv, g) holds
+    query head ``qhead_for[kv, g]``.  Handles non-uniform groups (TP
+    head padding clamps extra query heads onto the last kv head) by
+    sizing G to the largest group; surplus slots repeat head 0 and are
+    simply never read back by the (kvmap, pos) ungather.
+    """
+    kvmap = (np.arange(Hp) if kv_index is None
+             else np.asarray(kv_index, np.int32))
+    counts = np.bincount(kvmap, minlength=KV)
+    G = max(int(counts.max()), 1)
+    qhead_for = np.zeros((KV, G), np.int32)
+    pos = np.zeros(Hp, np.int32)
+    fill = np.zeros(KV, np.int32)
+    for h, kv in enumerate(kvmap):
+        qhead_for[kv, fill[kv]] = h
+        pos[h] = fill[kv]
+        fill[kv] += 1
+    return kvmap, pos, qhead_for, G
+
+
+def _paged_decode_common(q, k_pages, v_pages, k_new, v_new, tables, index,
+                         kv_index, interpret):
+    B, _, Hp, hd = q.shape
+    KV = k_pages.shape[2]
+    kvmap, pos, qhead_for, _ = _kv_grouping(Hp, KV, kv_index)
+    # both public wrappers are @_with_env_interpret-decorated, so the
+    # flag is already a concrete bool here (env resolution must stay
+    # outside the traced body — see _with_env_interpret)
+    interp = interpret
+    qg = q[:, 0][:, qhead_for]                  # (B, KV, G, hd)
+    kn = k_new.transpose(0, 2, 1, 3)            # (B, KV, 1, hd)
+    vn = v_new.transpose(0, 2, 1, 3)
+    if not interp and hd % 128:
+        # native TPU lanes: pad hd; the softmax scale must still use the
+        # REAL hd, so pre-scale q by sqrt(hd_padded / hd) (cast — a numpy
+        # scalar would promote bf16 inputs to f32).  NOTE this pads the
+        # WHOLE pool per call — fine for correctness, but a production
+        # TPU deployment should allocate the pool lane-aligned (hd a
+        # multiple of 128) so this branch never fires; see ROADMAP.
+        qg, kn, vn = (_pad_lanes(a, -1) for a in (qg, kn, vn))
+        k_pages = _pad_lanes(k_pages, -1)
+        v_pages = _pad_lanes(v_pages, -1)
+        qg = qg * jnp.asarray(np.sqrt(qg.shape[-1] / hd), qg.dtype)
+    idx = index.astype(jnp.int32)
+    idx = jnp.broadcast_to(idx.reshape(-1) if idx.ndim else idx, (B,))
+    out = _gd.paged_gqa_decode(qg, k_pages, v_pages, kn, vn,
+                               tables.astype(jnp.int32), idx,
+                               interpret=interp)
+    return out[:, kvmap, pos][..., :hd][:, None]     # (B, 1, Hp, hd)
+
+
+@_with_env_interpret
+@functools.partial(jax.jit, static_argnames=("kv_index", "interpret"))
+def paged_gqa_decode(q, k_pages, v_pages, k_new, v_new, tables, index, *,
+                     kv_index: tuple | None = None,
+                     interpret: bool | None = None):
+    """Model-facing paged decode attention over a block-pool KV cache.
+
+    q: (B,1,Hp,hd); k_pages/v_pages: (NP,BS,KV,hd) physical pool;
+    k_new/v_new: (B,1,KV,hd) current token; tables: (B,NBT) int32
+    physical block ids; index: (B,) int32 per-row write positions.
+    The kernel streams each row's blocks in logical order via the
+    scalar-prefetched table — no materialised per-row gathered cache.
+    """
+    return _paged_decode_common(q, k_pages, v_pages, k_new, v_new,
+                                tables, index, kv_index, interpret)
+
+
+@_with_env_interpret
+@functools.partial(jax.jit, static_argnames=("kv_index", "block_k",
+                                             "interpret"))
+def gqa_decode_ragged(q, k_cache, v_cache, index, k_new, v_new, *,
+                      kv_index: tuple | None = None, block_k: int = 128,
+                      interpret: bool | None = None):
+    """Ragged-index dense-cache decode via the paged kernel.
+
+    q: (B,1,Hp,hd); k_cache/v_cache: (B,Smax,KV,hd); index: () or (B,)
+    int32 valid-position counts (cache rows hold [0, index) plus the
+    explicit k_new/v_new (B,1,KV,hd) current token).  The dense cache is
+    VIEWED as B*nb physical blocks with an identity block table — a
+    reshape, not a copy — so one kernel serves dense and paged decode.
+    """
+    B, _, Hp, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    bs = min(block_k, Smax)
+    while Smax % bs:
+        bs //= 2
+    nb = Smax // bs
+    kp = k_cache.reshape(B * nb, bs, KV, hd)
+    vp = v_cache.reshape(B * nb, bs, KV, hd)
+    tables = (jnp.arange(B, dtype=jnp.int32)[:, None] * nb
+              + jnp.arange(nb, dtype=jnp.int32)[None, :])
+    return _paged_decode_common(q, kp, vp, k_new, v_new, tables, index,
+                                kv_index, interpret)

@@ -97,3 +97,31 @@ def decode_attention_ref(q, k_cache, v_cache, index):
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", p.astype(q.dtype), v_cache)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, k_new, v_new, tables,
+                               lengths):
+    """Gather-then-attend oracle for the paged decode kernel.
+
+    q: (B,KV,G,hd); k_pages/v_pages: (NP,BS,KV,hd); k_new/v_new:
+    (B,KV,1,hd); tables: (B,NBT) int32; lengths: (B,) int32.  Attends
+    over pool positions [0, lengths[b]) plus the explicit new token —
+    the materialised-gather computation the kernel replaces.
+    """
+    B, KV, G, hd = q.shape
+    BS = k_pages.shape[1]
+    NBT = tables.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    kc = jnp.take(k_pages, tables, axis=0).reshape(B, NBT * BS, KV, hd)
+    vc = jnp.take(v_pages, tables, axis=0).reshape(B, NBT * BS, KV, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", q, kc).astype(jnp.float32) * scale
+    mask = jnp.arange(NBT * BS)[None, None, None, :] < \
+        lengths[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    s_cur = jnp.einsum("bhgd,bhqd->bhgq", q, k_new).astype(jnp.float32) * scale
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), s_cur)
+    p = jnp.exp(s - m)
+    p_cur = jnp.exp(s_cur - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True) + p_cur
+    out = jnp.einsum("bhgk,bkhd->bhgd", (p / denom).astype(q.dtype), vc)
+    return out + (p_cur / denom).astype(q.dtype) * v_new

@@ -2,7 +2,11 @@
 
 These are the HOST-target implementations (the "x86 software function" in
 Xar-Trek terms).  The ACCEL target swaps in the Pallas kernels from
-``repro.kernels`` at MigratableFunction boundaries.
+``repro.kernels`` at MigratableFunction boundaries: ``decode_attention``
+and ``paged_decode_attention`` take a ``backend=`` selector ("xla" keeps
+the reference math, "pallas" routes the same ABI through the Pallas
+decode kernels), so the serve engine can register genuinely different
+HOST/ACCEL builds of one step function.
 
 GQA with padded query heads: query heads are padded to a TP-divisible
 count ``Hp``; padded heads have zero weights and their kv mapping is
@@ -264,9 +268,17 @@ def read_cache_layer(cache: dict, layer: int, dtype=jnp.bfloat16):
     return k, v
 
 
+def _static_kv_index(kv_index) -> tuple | None:
+    """np.ndarray -> hashable tuple for the jitted kernel wrappers."""
+    if kv_index is None:
+        return None
+    return tuple(int(i) for i in np.asarray(kv_index))
+
+
 def decode_attention(q, k_cache, v_cache, index: jax.Array,
                      kv_index: np.ndarray | None = None,
-                     k_new=None, v_new=None) -> jax.Array:
+                     k_new=None, v_new=None, backend: str = "xla"
+                     ) -> jax.Array:
     """Single-token attention over a (possibly seq-sharded) cache.
 
     q: (B,1,Hp,hd); k_cache/v_cache: (B,Smax,KV,hd).  ``index`` is a
@@ -280,7 +292,18 @@ def decode_attention(q, k_cache, v_cache, index: jax.Array,
     baseline olmoe decode cell copied the full 1 GB cache stack per layer
     — 103 GB/chip/step of pure copy traffic; EXPERIMENTS.md §Perf 2.)
     Without k_new, attends over [0, index] (cache already updated).
+
+    ``backend="pallas"`` runs the same computation through the Pallas
+    decode kernels (the ACCEL variant); "xla" is the reference below.
     """
+    if backend == "pallas":
+        from repro.kernels import ops as kernel_ops
+        kvt = _static_kv_index(kv_index)
+        if k_new is None:
+            return kernel_ops.gqa_decode(q, k_cache, v_cache, index,
+                                         kv_index=kvt)
+        return kernel_ops.gqa_decode_ragged(q, k_cache, v_cache, index,
+                                            k_new, v_new, kv_index=kvt)
     B, _, Hp, hd = q.shape
     Smax = k_cache.shape[1]
     if kv_index is not None:
@@ -311,3 +334,38 @@ def decode_attention(q, k_cache, v_cache, index: jax.Array,
     out = out + jnp.einsum("bhqk,bkhd->bqhd",
                            (p_cur / denom).astype(q.dtype), v_new)
     return out
+
+
+def paged_decode_attention(q, k_pages, v_pages, table, index: jax.Array,
+                           k_new, v_new,
+                           kv_index: np.ndarray | None = None,
+                           backend: str = "xla") -> jax.Array:
+    """Single-token attention over one layer of a paged (block-pool) cache.
+
+    q: (B,1,Hp,hd); k_pages/v_pages: (NP,BS,KV,hd) physical blocks;
+    table: (B,NBT) int32 block ids (logical block j of row b lives at
+    ``table[b, j]``); index: (B,) int32 per-row write positions.  The
+    pool contributes positions [0, index) and the current token's
+    ``k_new/v_new`` (B,1,KV,hd) is folded in explicitly
+    (write-then-attend, as in ``decode_attention``).
+
+    backend="xla" gathers the row's blocks into logical order and reuses
+    ``decode_attention`` (the HOST reference — one materialised
+    (B, NBT*BS, KV, hd) cache per call); backend="pallas" streams the
+    blocks inside the paged decode kernel with no materialised gather
+    (the ACCEL variant).
+    """
+    if backend == "pallas":
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.paged_gqa_decode(
+            q, k_pages, v_pages, k_new, v_new, table, index,
+            kv_index=_static_kv_index(kv_index))
+    B = q.shape[0]
+    NBT = table.shape[1]
+    BS = k_pages.shape[1]
+    rows_k = jnp.take(k_pages, table, axis=0)         # (B, NBT, BS, KV, hd)
+    rows_v = jnp.take(v_pages, table, axis=0)
+    kc = rows_k.reshape(B, NBT * BS, *rows_k.shape[3:])
+    vc = rows_v.reshape(B, NBT * BS, *rows_v.shape[3:])
+    return decode_attention(q, kc, vc, index[:, None, None, None],
+                            kv_index=kv_index, k_new=k_new, v_new=v_new)

@@ -116,11 +116,13 @@ class Model:
         total = loss + 0.01 * aux
         return total, {"lm_loss": loss, "aux_loss": aux}
 
-    def prefill(self, params, batch) -> tuple[jax.Array, dict]:
+    def prefill(self, params, batch, backend: str = "xla"
+                ) -> tuple[jax.Array, dict]:
         cfg = self.cfg
         if cfg.family in ("dense", "moe", "vlm", "audio"):
             logits, cache, _ = tf_lib.forward(params, batch, cfg, self.geom,
-                                              self.mesh, mode="prefill")
+                                              self.mesh, mode="prefill",
+                                              backend=backend)
             return logits[:, -1:], cache
         x = tf_lib.embed_inputs(params, batch, cfg)
         positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
@@ -131,12 +133,14 @@ class Model:
         logits = tf_lib.output_logits(params, x[:, -1:], cfg)
         return logits, cache
 
-    def prefill_at(self, params, batch) -> tuple[jax.Array, dict]:
+    def prefill_at(self, params, batch, backend: str = "xla"
+                   ) -> tuple[jax.Array, dict]:
         """Prefill over right-padded prompts (continuous batching's shape
         buckets).  batch: {"tokens": (B, S_pad), "length": (B,) int32 real
         prompt lengths}.  Returns logits at each row's last REAL position
         (causal masking makes right-padding invisible to positions before
         it) and the full padded-cache — callers slice [:length) per row.
+        ``backend``: "xla" reference attention or "pallas" flash kernel.
         Attention families only (ssm/hybrid state has no per-row seek)."""
         cfg = self.cfg
         if cfg.family not in ("dense", "moe", "vlm", "audio"):
@@ -144,7 +148,8 @@ class Model:
                 f"prefill_at: {cfg.family} caches are position-synchronised")
         fwd = {k: v for k, v in batch.items() if k != "length"}
         logits, cache, _ = tf_lib.forward(params, fwd, cfg, self.geom,
-                                          self.mesh, mode="prefill")
+                                          self.mesh, mode="prefill",
+                                          backend=backend)
         idx = batch["length"].astype(jnp.int32) - 1          # (B,)
         if cfg.family == "audio" and cfg.num_codebooks > 1:
             last = jnp.take_along_axis(
@@ -153,17 +158,20 @@ class Model:
             last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)
         return last, cache
 
-    def decode(self, params, cache, batch) -> tuple[jax.Array, dict]:
+    def decode(self, params, cache, batch, backend: str = "xla"
+               ) -> tuple[jax.Array, dict]:
         """batch: {"tokens": (B,1)|(B,K,1), "index": scalar int32}.
 
         Attention families additionally accept ``index`` as a (B,) int32
         vector of per-row positions for ragged continuous-batching decode
-        (ssm/hybrid caches remain position-synchronised)."""
+        (ssm/hybrid caches remain position-synchronised), and a
+        ``backend`` selector: "xla" (HOST reference) or "pallas" (ACCEL —
+        the flash-decoding / paged-streaming Pallas kernels)."""
         cfg = self.cfg
         if cfg.family in ("dense", "moe", "vlm", "audio"):
             logits, new_cache, _ = tf_lib.forward(
                 params, batch, cfg, self.geom, self.mesh, mode="decode",
-                cache=cache)
+                cache=cache, backend=backend)
             return logits, new_cache
         x = tf_lib.embed_inputs(params, batch, cfg)
         positions = jnp.broadcast_to(batch["index"], x.shape[:2])

@@ -179,21 +179,23 @@ def qkv_project(x, lp, cfg: ModelConfig, geom: Geometry, positions):
 
 def attention_block(x, lp, cfg: ModelConfig, geom: Geometry, *,
                     positions, mode: str, cache_kv=None, cache_index=None,
-                    mesh=None):
+                    mesh=None, backend: str = "xla"):
     """Returns (out, (k_new, v_new)).  x: (B,S,d).
 
     For decode, ``cache_kv`` must ALREADY contain the new token's k/v at
     ``cache_index`` (callers write-then-attend so the token sees itself).
     cfg.attn_impl selects the HOST ("ref") or ACCEL ("flash" Pallas
-    kernel) implementation for train/prefill.
+    kernel) implementation for train/prefill; ``backend="pallas"``
+    forces the Pallas kernel regardless of cfg (the per-call ACCEL
+    selector the serve engine threads through).
     """
     q, k, v = qkv_project(x, lp, cfg, geom, positions)
     kv_idx = kv_index_for(cfg, geom)
     if mode == "decode":
         k_cache, v_cache = cache_kv
         out = attn_lib.decode_attention(q, k_cache, v_cache, cache_index,
-                                        kv_index=kv_idx)
-    elif cfg.attn_impl == "flash":
+                                        kv_index=kv_idx, backend=backend)
+    elif backend == "pallas" or cfg.attn_impl == "flash":
         out = attn_lib.flash_attention_sharded(q, k, v, mesh,
                                                kv_index=kv_idx)
     else:
@@ -314,11 +316,12 @@ def moe_block(x, lp, cfg: ModelConfig, mesh: Optional[jax.sharding.Mesh]):
 # ------------------------------------------------------------ layer body
 
 def layer_body(x, lp, cfg: ModelConfig, geom: Geometry, mesh, *,
-               positions, mode: str, cache_kv=None, cache_index=None):
+               positions, mode: str, cache_kv=None, cache_index=None,
+               backend: str = "xla"):
     h, kv = attention_block(rmsnorm(x, lp["ln1"], cfg.norm_eps), lp, cfg, geom,
                             positions=positions, mode=mode,
                             cache_kv=cache_kv, cache_index=cache_index,
-                            mesh=mesh)
+                            mesh=mesh, backend=backend)
     x = x + h
     if cfg.family == "moe":
         h, aux = moe_block(rmsnorm(x, lp["ln2"], cfg.norm_eps), lp, cfg, mesh)
@@ -395,20 +398,6 @@ def _write_kv_layer(stack, new, li, cache_index):
         stack, new.astype(stack.dtype)[None], (li, 0, cache_index, 0, 0))
 
 
-def _gather_paged_kv(stack, li, table):
-    """Gather one layer's paged KV into per-row logical order.
-
-    stack: (L, NB_phys, BS, KV, hd) block pool; table: (B, NBT) physical
-    block ids, logical block j of row b lives at ``table[b, j]``.
-    Returns (B, NBT*BS, KV, hd) — the same row-major layout dense decode
-    attention reads, so ``decode_attention`` applies unchanged.
-    """
-    layer = jax.lax.dynamic_index_in_dim(stack, li, 0, keepdims=False)
-    rows = jnp.take(layer, table, axis=0)          # (B, NBT, BS, KV, hd)
-    b, nbt, bs = rows.shape[:3]
-    return rows.reshape(b, nbt * bs, *rows.shape[3:])
-
-
 def _write_kv_block(stack, new, li, blk, off):
     """Scatter the new token's KV (B,1,KV,hd) into layer ``li`` of the
     block pool at per-row (physical block, offset).  Rows sharing a
@@ -418,11 +407,15 @@ def _write_kv_block(stack, new, li, blk, off):
 
 
 def forward(params, batch, cfg: ModelConfig, geom: Geometry, mesh, *,
-            mode: str, cache: dict | None = None):
+            mode: str, cache: dict | None = None, backend: str = "xla"):
     """mode: train | prefill | decode.
 
     Decode reads a dense (L,B,Smax,KV,hd) cache, or — when the batch
     carries a ``block_table`` — a paged (L,NB,BS,KV,hd) block pool.
+    ``backend`` selects the attention implementation for prefill/decode:
+    "xla" (HOST reference) or "pallas" (ACCEL kernels — flash prefill,
+    flash-decoding / paged-streaming decode).  int8 decode ignores it
+    (no dequantising Pallas kernel yet).
     Returns (logits, new_cache_or_None, aux_loss).
     """
     x = embed_inputs(params, batch, cfg)
@@ -456,7 +449,7 @@ def forward(params, batch, cfg: ModelConfig, geom: Geometry, mesh, *,
             vc = jax.lax.dynamic_index_in_dim(cv, li, 0, keepdims=False)
             out = attn_lib.decode_attention(
                 q, kc.astype(x.dtype), vc.astype(x.dtype), attn_index,
-                kv_index=kv_idx, k_new=k, v_new=v)
+                kv_index=kv_idx, k_new=k, v_new=v, backend=backend)
             ck = _write_kv_layer(ck, k, li, cache_index)
             cv = _write_kv_layer(cv, v, li, cache_index)
             x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
@@ -471,7 +464,8 @@ def forward(params, batch, cfg: ModelConfig, geom: Geometry, mesh, *,
 
         if "block_table" in batch:
             return _forward_decode_paged(params, batch, cfg, geom, mesh,
-                                         cache, x, positions)
+                                         cache, x, positions,
+                                         backend=backend)
         if cache["k"].dtype == jnp.int8:
             return _forward_decode_int8(params, batch, cfg, geom, mesh,
                                         cache, x, positions)
@@ -485,7 +479,7 @@ def forward(params, batch, cfg: ModelConfig, geom: Geometry, mesh, *,
     def body(x_aux, lp):
         x, aux = x_aux
         x, kv, a = layer_body(x, lp, cfg, geom, mesh, positions=positions,
-                              mode=mode)
+                              mode=mode, backend=backend)
         if mode == "prefill":
             return (x, aux + a), kv
         return (x, aux + a), None
@@ -555,24 +549,29 @@ def _forward_decode_int8(params, batch, cfg, geom, mesh, cache, x, positions):
     return output_logits(params, x, cfg), new_cache, aux
 
 
-def _forward_decode_paged(params, batch, cfg, geom, mesh, cache, x, positions):
+def _forward_decode_paged(params, batch, cfg, geom, mesh, cache, x, positions,
+                          backend: str = "xla"):
     """Decode-layer scan over a paged (block-pool) KV cache.
 
     batch carries ragged per-row state: ``index`` (B,) logical write
     positions and ``block_table`` (B, NBT) physical block ids.  Each
-    layer gathers the row's blocks into logical order, attends with the
-    explicit-new-token path (write-then-attend preserved: the gather
-    never includes the current position — it is masked by ``index`` —
-    and the new token's KV is passed to attention directly, then
+    layer attends the row's blocks in logical order with the
+    explicit-new-token path (write-then-attend preserved: the pool
+    never contributes the current position — it is masked by ``index``
+    — and the new token's KV is passed to attention directly, then
     scattered into the pool).  Math is identical to the dense body; only
     the cache addressing differs, so greedy tokens match byte-for-byte
     when the attention span (NBT * BS) equals the dense max_seq.
+
+    backend="xla" gathers each row's blocks into a logical-order cache
+    per layer (HOST); backend="pallas" hands the pool plus the block
+    table to the paged decode kernel, which streams the blocks in-kernel
+    with no materialised gather (ACCEL).
     """
     cache_index = batch["index"]                   # (B,)
     table = batch["block_table"]                   # (B, NBT) int32
     bs = cache["k"].shape[2]
     kv_idx = kv_index_for(cfg, geom)
-    attn_index = cache_index[:, None, None, None]
     blk = jnp.take_along_axis(table, (cache_index // bs)[:, None],
                               axis=1)[:, 0]        # (B,) physical block
     off = cache_index % bs
@@ -581,10 +580,11 @@ def _forward_decode_paged(params, batch, cfg, geom, mesh, cache, x, positions):
         x, ck, cv, li, aux = carry
         xn = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         q, k, v = qkv_project(xn, lp, cfg, geom, positions)
-        kc = _gather_paged_kv(ck, li, table).astype(x.dtype)
-        vc = _gather_paged_kv(cv, li, table).astype(x.dtype)
-        out = attn_lib.decode_attention(q, kc, vc, attn_index,
-                                        kv_index=kv_idx, k_new=k, v_new=v)
+        kcp = jax.lax.dynamic_index_in_dim(ck, li, 0, keepdims=False)
+        vcp = jax.lax.dynamic_index_in_dim(cv, li, 0, keepdims=False)
+        out = attn_lib.paged_decode_attention(
+            q, kcp.astype(x.dtype), vcp.astype(x.dtype), table, cache_index,
+            k_new=k, v_new=v, kv_index=kv_idx, backend=backend)
         ck = _write_kv_block(ck, k, li, blk, off)
         cv = _write_kv_block(cv, v, li, blk, off)
         x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])

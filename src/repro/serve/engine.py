@@ -165,9 +165,25 @@ class ContinuousBatchingEngine:
     With a ``runtime``, every prefill/decode dispatches through
     ``XarTrekRuntime.call`` under the names ``{fn_prefix}_prefill`` /
     ``{fn_prefix}_decode`` so Algorithm 2 picks the target per step; the
-    engine registers HOST and ACCEL variants (identical math — the
-    ACCEL build is the hardware-kernel stand-in, as in the examples)
-    unless the caller pre-registered its own.
+    engine registers DISTINCT builds per step via ``MultiTargetBinary``:
+    HOST is the XLA reference math and ACCEL routes the same ABI through
+    the Pallas kernels (flash prefill; flash-decoding / paged-streaming
+    decode) — a migration is a real kernel swap, not a label change.
+    Both are compiled eagerly at ``prepare()`` (``eager_accel=True``, the
+    default) so the first migration never pays compile time inside the
+    timed region; pass ``eager_accel=False`` to keep the paper's
+    asynchronous FPGA-pre-configuration behaviour instead.  Unless the
+    caller pre-registered its own variants.
+
+    ``backend`` selects the DIRECT path (no runtime): "host" serves
+    every step on XLA, "accel" on the Pallas kernels, and "auto"
+    (default) behaves as "host" without a runtime while leaving target
+    choice to the scheduler with one.  int8 KV caches have no Pallas
+    dequantising decode yet, so their ACCEL variant stays on XLA math.
+
+    ``on_step`` (callable, receives the engine) fires after every decode
+    step — benchmarks and tests use it to flip scheduler policy
+    mid-stream (forced HOST->ACCEL->HOST migration schedules).
 
     Greedy sampling, matching ``ServeEngine`` token-for-token on the
     same prompts.  Row-independent attention families only: ssm/hybrid
@@ -182,7 +198,9 @@ class ContinuousBatchingEngine:
                  runtime: Optional[XarTrekRuntime] = None,
                  fn_prefix: str = "cb", min_bucket: int = 8,
                  paged: bool = False, block_size: int = 32,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 backend: str = "auto", eager_accel: bool = True,
+                 on_step=None):
         if cfg.family not in ("dense", "vlm"):
             # ssm/hybrid caches are position-synchronised; moe routing is
             # batch-coupled (capacity = f(batch tokens), so junk tokens
@@ -194,12 +212,16 @@ class ContinuousBatchingEngine:
         if paged and cfg.kv_cache_dtype == "int8":
             raise NotImplementedError(
                 "paged KV does not support int8 cache quantization yet")
+        if backend not in ("host", "accel", "auto"):
+            raise ValueError(f"backend must be host|accel|auto: {backend!r}")
         self.cfg = cfg
         self.model = build_model(cfg, mesh)
         self.mesh = mesh
         self.runtime = runtime
         self.min_bucket = min_bucket
         self.paged = paged
+        self.backend = backend
+        self.on_step = on_step
         if params is None:
             params = self.model.init(jax.random.PRNGKey(seed))
         self.params = params
@@ -235,10 +257,16 @@ class ContinuousBatchingEngine:
         else:
             self.slots = SlotManager(max_slots, max_seq)
             self.cache = self.model.init_cache(max_slots, max_seq)
-        self._prefill = jax.jit(self.model.prefill_at)
+        # direct-path (no-runtime) step functions honour the backend
+        # selector; "auto" without a runtime serves on HOST math
+        direct = "pallas" if backend == "accel" else "xla"
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill_at(p, b, backend=direct))
         # donate the cache: without aliasing every token copies the full
         # (L, max_slots, max_seq, KV, hd) stack (see decode_attention)
-        self._decode = jax.jit(self.model.decode, donate_argnums=(1,))
+        self._decode = jax.jit(
+            lambda p, c, b: self.model.decode(p, c, b, backend=direct),
+            donate_argnums=(1,))
         # one fused in-place write of a request's bucketed prefill KV into
         # its cache row (eager per-leaf updates would each materialize a
         # full copy of the whole batched cache)
@@ -256,7 +284,7 @@ class ContinuousBatchingEngine:
         self._resume: dict[int, list[int]] = {}   # req_id -> tokens so far
         self.reset_stats()
         if runtime is not None:
-            self._prepare_runtime(runtime, fn_prefix)
+            self._prepare_runtime(runtime, fn_prefix, eager_accel)
 
     def reset_stats(self) -> None:
         """Zero the per-serve counters (benchmarks call this after their
@@ -265,21 +293,42 @@ class ContinuousBatchingEngine:
                       "decode_row_util": 0.0}
 
     # ------------------------------------------------- runtime plumbing
-    def _prepare_runtime(self, rt: XarTrekRuntime, fn_prefix: str) -> None:
-        def prefill_fn(params, batch):
-            return self.model.prefill_at(params, batch)
+    def _prepare_runtime(self, rt: XarTrekRuntime, fn_prefix: str,
+                         eager_accel: bool) -> None:
+        def step_fns(impl: str):
+            def prefill_fn(params, batch):
+                return self.model.prefill_at(params, batch, backend=impl)
 
-        def decode_fn(params, cache, batch):
-            return self.model.decode(params, cache, batch)
+            def decode_fn(params, cache, batch):
+                return self.model.decode(params, cache, batch, backend=impl)
 
+            return prefill_fn, decode_fn
+
+        # HOST keeps the XLA reference; ACCEL is a genuinely different
+        # build on the Pallas kernels (same ABI, checked at prepare) —
+        # except int8 caches, whose dequantising kernel doesn't exist
+        # yet, and backend="host", which pins both variants to XLA
+        accel_impl = ("pallas" if (self.backend != "host"
+                                   and self.cfg.kv_cache_dtype != "int8")
+                      else "xla")
+        host_prefill, host_decode = step_fns("xla")
+        if accel_impl == "pallas":
+            accel_prefill, accel_decode = step_fns(accel_impl)
+        else:
+            # identical math: reuse the HOST functions and keep the
+            # ACCEL pre-configuration asynchronous — a blocking eager
+            # compile would buy zero kernel asymmetry
+            accel_prefill, accel_decode = host_prefill, host_decode
+            eager_accel = False
         # one app (= one threshold row) per step function, so Algorithm 1
         # doesn't mix prefill and decode timings in one row
-        for name, fn in ((self._prefill_name, prefill_fn),
-                         (self._decode_name, decode_fn)):
+        for name, host_fn, accel_fn in (
+                (self._prefill_name, host_prefill, accel_prefill),
+                (self._decode_name, host_decode, accel_decode)):
             if name not in rt.registry:
                 rt.registry.register(MigratableFunction(
                     name, name,
-                    {TargetKind.HOST: fn, TargetKind.ACCEL: fn}))
+                    {TargetKind.HOST: host_fn, TargetKind.ACCEL: accel_fn}))
         ex_prefill = (self.params,
                       {"tokens": jnp.zeros((1, self.min_bucket), jnp.int32),
                        "length": jnp.ones((1,), jnp.int32)})
@@ -292,8 +341,9 @@ class ContinuousBatchingEngine:
             dec_batch["block_table"] = jnp.zeros(
                 (self.slots.max_slots, self.slots.table_width), jnp.int32)
         ex_decode = (self.params, self.cache, dec_batch)
-        rt.prepare(self._prefill_name, *ex_prefill)
-        rt.prepare(self._decode_name, *ex_decode, donate_argnums=(1,))
+        rt.prepare(self._prefill_name, *ex_prefill, eager_accel=eager_accel)
+        rt.prepare(self._decode_name, *ex_decode, donate_argnums=(1,),
+                   eager_accel=eager_accel)
 
     # -------------------------------------------------------- admission
     def submit(self, prompt, max_new_tokens: int = 16,
@@ -448,6 +498,8 @@ class ContinuousBatchingEngine:
                 self._admit(req)
             if self.slots.active:
                 self._decode_step()
+                if self.on_step is not None:
+                    self.on_step(self)
             else:
                 nxt = self.queue.next_arrival()
                 if nxt is None:

@@ -176,6 +176,69 @@ def test_prefill_shape_buckets_cached(cfg, sync_engine):
     assert stats["evictions"] == 0
 
 
+# ----------------------------------------------------- ACCEL / migration
+
+def test_accel_backend_tokens_match_host(cfg, sync_engine):
+    """Direct (no-runtime) engines: every step on the Pallas kernels must
+    reproduce the XLA engine's greedy tokens byte-for-byte — dense ragged
+    decode and paged (in-kernel block streaming) alike."""
+    prompts = _prompts(cfg, B=4, S=12)
+    want = sync_engine.generate(prompts, max_new_tokens=5).tokens
+    for kw in ({}, {"paged": True, "block_size": 16}):
+        accel = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=64,
+                                         params=sync_engine.params,
+                                         backend="accel", **kw)
+        got = accel.generate(np.asarray(prompts), max_new_tokens=5)
+        np.testing.assert_array_equal(want, got, err_msg=str(kw))
+
+
+def test_forced_midstream_migration_is_byte_identical(cfg, sync_engine):
+    """HOST -> ACCEL -> HOST forced mid-stream (policy flips while slots
+    are live): a real kernel swap under generation must keep greedy
+    tokens byte-identical to the no-migration run, and the summary must
+    prove both backends actually served decode steps."""
+    prompts = _prompts(cfg, B=4, S=12)
+    want = sync_engine.generate(prompts, max_new_tokens=6).tokens
+
+    rt = XarTrekRuntime(registry=FunctionRegistry(), policy="always_host")
+
+    def flip(engine):
+        s = engine.stats["decode_steps"]
+        if s == 1:
+            rt.server.policy = "always_accel"
+        elif s == 3:
+            rt.server.policy = "always_host"
+
+    mig = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=64,
+                                   params=sync_engine.params, runtime=rt,
+                                   paged=True, block_size=16, on_step=flip)
+    got = mig.generate(np.asarray(prompts), max_new_tokens=6)
+    np.testing.assert_array_equal(want, got)
+
+    summary = rt.summary()
+    decode = summary["per_function"]["cb_decode"]
+    assert decode["calls"].get("host", 0) >= 1
+    assert decode["calls"].get("accel", 0) >= 1
+    assert decode["migrations"] >= 2            # there AND back
+    # distinct builds: both targets were compiled (eagerly, at prepare)
+    assert decode["compiles"]["host"]["compiles"] >= 1
+    assert decode["compiles"]["accel"]["compiles"] >= 1
+
+
+def test_eager_accel_compiles_before_first_call(cfg, sync_engine):
+    """prepare() must leave the ACCEL build bank-resident so the first
+    migration never pays compile time inside the timed region."""
+    rt = XarTrekRuntime(registry=FunctionRegistry())
+    ContinuousBatchingEngine(cfg, max_slots=2, max_seq=32,
+                             params=sync_engine.params, runtime=rt,
+                             fn_prefix="eag")
+    assert rt.bank.is_resident("eag_decode")
+    assert rt.bank.is_resident("eag_prefill")
+    from repro.core.targets import TargetKind as TK
+    assert rt.binaries["eag_decode"].is_compiled(TK.ACCEL)
+    assert not rt.call_log                      # compiles, not calls
+
+
 # ------------------------------------------------------- queue + buckets
 
 def test_request_queue_orders_by_arrival_then_fifo():
