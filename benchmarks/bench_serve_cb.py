@@ -22,7 +22,12 @@ budgets) served three ways on the same model and weights:
     the artifact records per-target call counts, per-backend decode step
     times (the asymmetry Algorithm 2 can exploit) and the migration
     count.  ``--json`` embeds ``XarTrekRuntime.summary()`` so CI can see
-    which backend actually served tokens.
+    which backend actually served tokens;
+  * sampled-decode serving — the same stream with per-request
+    SamplingParams (temperature 0.8, top-k 40, per-request seeds)
+    through the in-graph sampler, reporting tok/s plus per-request
+    TTFT/TPOT/queue-wait percentiles from the v2 RequestOutput metrics
+    (floor.json holds a tok/s floor AND a ttft_p50_s ceiling).
 
 Emits ``serve_cb/*`` rows; derived carries tok/s for each engine, the
 continuous/synchronous throughput ratio, and the paged engine's peak
@@ -50,7 +55,8 @@ from benchmarks.common import emit
 from repro.configs import ARCHS, reduced
 from repro.core.function import FunctionRegistry
 from repro.core.runtime import XarTrekRuntime
-from repro.serve import ContinuousBatchingEngine, Request, ServeEngine
+from repro.serve import (ContinuousBatchingEngine, GenerationRequest,
+                         SamplingParams, ServeEngine)
 from repro.serve.scheduler import RequestQueue, poisson_arrivals
 
 MAX_SLOTS = 4
@@ -64,21 +70,27 @@ SEED = 0
 MIGRATE_AT = (4, 10)
 
 
-def make_requests(vocab: int, n: int, rate: float,
-                  seed: int = SEED) -> list[Request]:
+def make_requests(vocab: int, n: int, rate: float, seed: int = SEED,
+                  sampling: bool = False) -> list[GenerationRequest]:
+    """With ``sampling=True`` every request carries the sampled-decode
+    spec (temperature 0.8, top-k 40) and its own seed."""
     rng = np.random.RandomState(seed)
     arrivals = poisson_arrivals(n, rate, seed)
-    return [Request(rng.randint(0, vocab, size=int(rng.randint(4, PAD_TO))),
-                    max_new_tokens=int(rng.randint(4, 24)),
-                    arrival_s=t)
-            for t in arrivals]
+    return [GenerationRequest(
+        rng.randint(0, vocab, size=int(rng.randint(4, PAD_TO))),
+        max_new_tokens=int(rng.randint(4, 24)),
+        arrival_s=t,
+        sampling=(SamplingParams(temperature=0.8, top_k=40, seed=1000 + i)
+                  if sampling else SamplingParams()))
+            for i, t in enumerate(arrivals)]
 
 
-def total_tokens(reqs: list[Request]) -> int:
+def total_tokens(reqs: list[GenerationRequest]) -> int:
     return sum(r.max_new_tokens for r in reqs)
 
 
-def serve_static(engine: ServeEngine, reqs: list[Request]) -> float:
+def serve_static(engine: ServeEngine,
+                 reqs: list[GenerationRequest]) -> float:
     """Static batching: batches of up to MAX_SLOTS arrived requests, each
     left-padded to PAD_TO and run for the batch-max token budget.  The
     batch shape is held fixed at (MAX_SLOTS, PAD_TO) so the baseline
@@ -108,22 +120,37 @@ def serve_static(engine: ServeEngine, reqs: list[Request]) -> float:
 
 
 def serve_continuous(engine: ContinuousBatchingEngine,
-                     reqs: list[Request]) -> float:
+                     reqs: list[GenerationRequest]
+                     ) -> tuple[float, dict]:
     t0 = time.perf_counter()
-    out = engine.serve(reqs)
+    out = engine.run(reqs)
     elapsed = time.perf_counter() - t0
     assert len(out) == len(reqs), (len(out), len(reqs))
-    return elapsed
+    return elapsed, out
 
 
 def warm(engine, vocab: int, static: bool = False) -> None:
-    reqs = [Request(np.arange(1, 5, dtype=np.int32) % vocab,
-                    max_new_tokens=2)]
+    reqs = [GenerationRequest(np.arange(1, 5, dtype=np.int32) % vocab,
+                              max_new_tokens=2)]
     if static:
         serve_static(engine, reqs)
     else:
         serve_continuous(engine, reqs)
         engine.reset_stats()
+
+
+def latency_percentiles(outputs: dict) -> dict:
+    """Per-request latency percentiles from v2 RequestOutput metrics."""
+    ttft = [o.ttft_s for o in outputs.values()]
+    tpot = [o.tpot_s for o in outputs.values()]
+    qw = [o.queue_wait_s for o in outputs.values()]
+    return {
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p90_s": float(np.percentile(ttft, 90)),
+        "tpot_p50_s": float(np.percentile(tpot, 50)),
+        "tpot_p90_s": float(np.percentile(tpot, 90)),
+        "queue_wait_p50_s": float(np.percentile(qw, 50)),
+    }
 
 
 def main(argv=None) -> int:
@@ -170,7 +197,7 @@ def main(argv=None) -> int:
     tokens = total_tokens(reqs)
 
     t_sync = serve_static(sync, [dataclasses.replace(r) for r in reqs])
-    t_cb = serve_continuous(cb, [dataclasses.replace(r) for r in reqs])
+    t_cb, _ = serve_continuous(cb, [dataclasses.replace(r) for r in reqs])
     results = {
         "n_requests": args.n_requests, "rate_per_s": args.rate,
         "tokens": tokens,
@@ -180,14 +207,27 @@ def main(argv=None) -> int:
         "cb_vs_sync": (tokens / t_cb) / max(tokens / t_sync, 1e-9),
     }
     if paged is not None:
-        t_paged = serve_continuous(paged,
-                                   [dataclasses.replace(r) for r in reqs])
+        t_paged, _ = serve_continuous(paged,
+                                      [dataclasses.replace(r) for r in reqs])
         results.update({
             "paged_tok_s": tokens / t_paged,
             "paged_peak_active": paged.slots.stats["peak_active"],
             "paged_preempted": paged.slots.stats["preempted"],
             "paged_vs_dense_cb": (tokens / t_paged) / (tokens / t_cb),
         })
+
+    # sampled decode (temperature 0.8, top-k 40, per-request seeds)
+    # through the in-graph sampler, on the ALREADY-WARM paged engine:
+    # the greedy run above populated every prefill shape bucket, so this
+    # measures steady-state serving — sampling adds no recompiles (the
+    # (B,) sampling vectors are data, not shapes) and the TTFT/TPOT
+    # percentiles reflect serving latency, not compile noise
+    sampled_engine = paged if paged is not None else cb
+    sreqs = make_requests(cfg.vocab_size, args.n_requests, args.rate,
+                          args.seed, sampling=True)
+    t_sampled, souts = serve_continuous(sampled_engine, sreqs)
+    results["sampled_cb_tok_s"] = tokens / t_sampled
+    results.update(latency_percentiles(souts))
 
     t_accel = t_mig = None
     if not args.no_accel:
@@ -198,8 +238,8 @@ def main(argv=None) -> int:
             num_blocks=MAX_SLOTS * MAX_SEQ // BLOCK_SIZE, fn_prefix="acb",
             backend="accel")
         warm(accel, cfg.vocab_size)
-        t_accel = serve_continuous(accel,
-                                   [dataclasses.replace(r) for r in reqs])
+        t_accel, _ = serve_continuous(accel,
+                                      [dataclasses.replace(r) for r in reqs])
         results["accel_cb_tok_s"] = tokens / t_accel
 
         # forced HOST -> ACCEL -> HOST schedule through the runtime,
@@ -223,8 +263,8 @@ def main(argv=None) -> int:
                 rt.server.policy = "always_host"
 
         mig.on_step = flip
-        t_mig = serve_continuous(mig, [dataclasses.replace(r)
-                                       for r in reqs])
+        t_mig, _ = serve_continuous(mig, [dataclasses.replace(r)
+                                          for r in reqs])
         summary = rt.summary()
         decode_fn = summary["per_function"]["mig_decode"]
         step_ms = {"host": [], "accel": []}
@@ -258,6 +298,10 @@ def main(argv=None) -> int:
              f"peak_slots={results['paged_peak_active']}"
              f"(dense={results['cb_peak_active']}) "
              f"preempted={results['paged_preempted']}")
+    emit("serve_cb/sampled", t_sampled * 1e6 / tokens,
+         f"{results['sampled_cb_tok_s']:.1f}tok/s t=0.8 k=40 "
+         f"ttft_p50={results['ttft_p50_s'] * 1e3:.0f}ms "
+         f"tpot_p50={results['tpot_p50_s'] * 1e3:.1f}ms")
     if t_accel is not None:
         emit("serve_cb/accel", t_accel * 1e6 / tokens,
              f"{results['accel_cb_tok_s']:.1f}tok/s pallas")
@@ -279,21 +323,25 @@ def main(argv=None) -> int:
         with open(args.check_floor) as f:
             floor = json.load(f)
         failed = []
-        for key, minimum in floor.items():
-            got = results.get(key.removesuffix("_min"))
+        for key, bound in floor.items():
+            # *_min keys are floors (got >= bound); *_max keys are
+            # ceilings (got <= bound) — e.g. the TTFT latency bound
+            ceiling = key.endswith("_max")
+            name = key.removesuffix("_max" if ceiling else "_min")
+            got = results.get(name)
             if got is None:
-                # a floor with no matching result (typo'd key, renamed
+                # a bound with no matching result (typo'd key, renamed
                 # metric, --no-paged) must fail loudly, not pass vacuously
-                failed.append(f"{key}: no result named "
-                              f"{key.removesuffix('_min')!r}")
-            elif got < minimum:
-                failed.append(f"{key.removesuffix('_min')}={got:.2f} "
-                              f"< floor {minimum}")
+                failed.append(f"{key}: no result named {name!r}")
+            elif ceiling and got > bound:
+                failed.append(f"{name}={got:.2f} > ceiling {bound}")
+            elif not ceiling and got < bound:
+                failed.append(f"{name}={got:.2f} < floor {bound}")
         if failed:
             print("FLOOR CHECK FAILED: " + "; ".join(failed),
                   file=sys.stderr)
             return 1
-        print(f"floor check passed ({len(floor)} floors)")
+        print(f"floor check passed ({len(floor)} bounds)")
     return 0
 
 

@@ -1,5 +1,5 @@
 """Continuous-batching serving with run-time execution migration (the
-Fig-6 scenario on real JAX functions).
+Fig-6 scenario on real JAX functions), on the v2 serve API.
 
 A reduced model serves a ragged Poisson arrival stream through the
 ``ContinuousBatchingEngine``; every prefill/decode step dispatches
@@ -10,6 +10,14 @@ is a real kernel swap.  The scheduler watches the synthetic host load,
 pre-configures the ACCEL variant asynchronously at startup, and
 migrates decode steps when the load crosses the threshold.
 
+Requests are v2 ``GenerationRequest``s: half the stream samples with
+per-request seeds (temperature 0.8, top-k 40) through the IN-GRAPH
+sampler — the decode step keeps one static compile signature for any
+request mix, and a seeded request reproduces the same tokens no matter
+which target serves each step.  Results come back as ``RequestOutput``
+(finish reason + TTFT/TPOT metrics), and one request is consumed as a
+live token stream via its ``RequestHandle``.
+
     PYTHONPATH=src python examples/migration_serve.py [--backend auto]
 
 ``--backend`` pins the schedule instead of letting Algorithm 2 decide:
@@ -18,6 +26,7 @@ the Pallas build, ``auto`` (default) reproduces the load-driven
 migration above.
 """
 import argparse
+import threading
 import time
 
 import numpy as np
@@ -26,15 +35,21 @@ from repro.configs import ARCHS, reduced
 from repro.core.function import FunctionRegistry
 from repro.core.runtime import XarTrekRuntime
 from repro.core.targets import TargetKind
-from repro.serve import ContinuousBatchingEngine, Request
+from repro.serve import (ContinuousBatchingEngine, GenerationRequest,
+                         SamplingParams)
 from repro.serve.scheduler import poisson_arrivals
 
 
 def make_stream(vocab: int, n: int, rate_per_s: float, seed: int = 0):
+    """Mixed stream: even requests greedy, odd requests sampled with a
+    per-request seed — all through ONE decode signature."""
     rng = np.random.RandomState(seed)
-    return [Request(rng.randint(0, vocab, size=int(rng.randint(6, 28))),
-                    max_new_tokens=int(rng.randint(4, 16)), arrival_s=t)
-            for t in poisson_arrivals(n, rate_per_s, seed)]
+    return [GenerationRequest(
+        rng.randint(0, vocab, size=int(rng.randint(6, 28))),
+        max_new_tokens=int(rng.randint(4, 16)), arrival_s=t,
+        sampling=(SamplingParams(temperature=0.8, top_k=40, seed=seed * 100 + i)
+                  if i % 2 else SamplingParams()))
+        for i, t in enumerate(poisson_arrivals(n, rate_per_s, seed))]
 
 
 def main() -> None:
@@ -61,6 +76,20 @@ def main() -> None:
     row = rt.table.row("cb_decode")
     row.fpga_thr, row.arm_thr = 2.5, 1e9
 
+    # --- streaming demo: consume one request token-by-token while the
+    # engine loop drains in another thread
+    handle = engine.submit(np.arange(1, 11, dtype=np.int32) % cfg.vocab_size,
+                           max_new_tokens=8,
+                           sampling=SamplingParams(temperature=0.8,
+                                                   top_k=40, seed=1234))
+    t = threading.Thread(target=engine.run)
+    t.start()
+    streamed = [tok for tok in handle]          # blocks per token
+    t.join()
+    out = handle.result()
+    print(f"streamed  : {streamed} finish={out.finish_reason} "
+          f"ttft={out.ttft_s * 1e3:.0f}ms tpot={out.tpot_s * 1e3:.1f}ms")
+
     phases = [("low load", 0), ("high load", 6)]
     for pi, (phase, synthetic_load) in enumerate(phases):
         if pi == 1 and args.backend == "auto":
@@ -76,13 +105,19 @@ def main() -> None:
         mark = len(rt.call_log)
         reqs = make_stream(cfg.vocab_size, n=12, rate_per_s=30.0, seed=pi)
         t0 = time.perf_counter()
-        out = engine.serve(reqs)
+        outs = engine.run(reqs)
         dt = time.perf_counter() - t0
         for _ in range(synthetic_load):
             rt.monitor.job_finished(TargetKind.HOST)
-        tokens = sum(len(out[r.req_id]) for r in reqs)
+        tokens = sum(o.n_tokens for o in outs.values())
+        ttft = sorted(o.ttft_s for o in outs.values())
         targets = [rec["target"] for rec in rt.call_log[mark:]]
+        finish = {}
+        for o in outs.values():
+            finish[o.finish_reason] = finish.get(o.finish_reason, 0) + 1
         print(f"{phase:10s}: {tokens / dt:7.1f} tok/s  "
+              f"ttft_p50={ttft[len(ttft) // 2] * 1e3:.0f}ms "
+              f"finish={finish}  "
               f"targets={dict((t, targets.count(t)) for t in set(targets))}")
     print("summary:", rt.summary())
 

@@ -242,16 +242,24 @@ def _paged_decode_common(q, k_pages, v_pages, k_new, v_new, tables, index,
     qg = q[:, 0][:, qhead_for]                  # (B, KV, G, hd)
     kn = k_new.transpose(0, 2, 1, 3)            # (B, KV, 1, hd)
     vn = v_new.transpose(0, 2, 1, 3)
-    if not interp and hd % 128:
-        # native TPU lanes: pad hd; the softmax scale must still use the
-        # REAL hd, so pre-scale q by sqrt(hd_padded / hd) (cast — a numpy
-        # scalar would promote bf16 inputs to f32).  NOTE this pads the
-        # WHOLE pool per call — fine for correctness, but a production
-        # TPU deployment should allocate the pool lane-aligned (hd a
-        # multiple of 128) so this branch never fires; see ROADMAP.
+    hdp = k_pages.shape[-1]
+    if hdp != hd:
+        # pool allocated lane-aligned (init_paged_kv_cache(lane_align=)):
+        # only the per-token operands need padding to the pool's width —
+        # the whole-pool copy below never fires on an aligned pool
+        qg, kn, vn = (_pad_lanes(a, -1, multiple=hdp)
+                      for a in (qg, kn, vn))
+    if not interp and qg.shape[-1] % 128:
+        # legacy unaligned pool on native TPU lanes: pad hd — this pads
+        # the WHOLE pool per call; production TPU deployments should
+        # allocate the pool lane-aligned so this branch never fires
         qg, kn, vn = (_pad_lanes(a, -1) for a in (qg, kn, vn))
         k_pages = _pad_lanes(k_pages, -1)
         v_pages = _pad_lanes(v_pages, -1)
+    if qg.shape[-1] != hd:
+        # padded key lanes add 0 to scores, but the softmax scale must
+        # still use the REAL hd: pre-scale q by sqrt(hd_final / hd)
+        # (cast — a numpy scalar would promote bf16 inputs to f32)
         qg = qg * jnp.asarray(np.sqrt(qg.shape[-1] / hd), qg.dtype)
     idx = index.astype(jnp.int32)
     idx = jnp.broadcast_to(idx.reshape(-1) if idx.ndim else idx, (B,))

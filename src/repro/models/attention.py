@@ -211,8 +211,12 @@ def init_kv_cache(num_layers: int, batch: int, max_seq: int,
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
+LANE_WIDTH = 128     # TPU MXU/VPU lane width the Pallas kernels tile to
+
+
 def init_paged_kv_cache(num_layers: int, num_blocks: int, block_size: int,
-                        num_kv_heads: int, head_dim: int, dtype: str) -> dict:
+                        num_kv_heads: int, head_dim: int, dtype: str,
+                        lane_align: bool | None = None) -> dict:
     """Block-pool KV cache for paged continuous batching.
 
     Layout (L, num_blocks, block_size, KV, hd): physical blocks replace
@@ -220,12 +224,26 @@ def init_paged_kv_cache(num_layers: int, num_blocks: int, block_size: int,
     logical position p to (table[p // block_size], p % block_size).
     ``num_blocks`` counts PHYSICAL blocks, i.e. the pool's usable blocks
     plus the reserved junk block 0 (see serve.batch.BlockPool).
+
+    ``lane_align`` pads ``head_dim`` up to the TPU lane width (128) *at
+    allocation*, so the ACCEL paged kernel never has to lane-pad (=
+    copy) the whole pool per decode call — writers zero-pad the
+    per-token KV instead (cheap) and readers slice the real ``head_dim``
+    back out.  ``None`` (default) aligns exactly when the Pallas
+    kernels would compile natively (``not interpret``), and keeps the
+    historical unpadded layout in interpret mode so CI behaviour — and
+    CI memory — is unchanged.
     """
     if dtype == "int8":
         raise NotImplementedError(
             "paged KV does not support int8 cache quantization yet "
             "(per-block scales need their own pool)")
-    shape = (num_layers, num_blocks, block_size, num_kv_heads, head_dim)
+    if lane_align is None:
+        from repro.kernels.ops import _interpret
+        lane_align = not _interpret(None)
+    hd_alloc = (head_dim + (-head_dim) % LANE_WIDTH if lane_align
+                else head_dim)
+    shape = (num_layers, num_blocks, block_size, num_kv_heads, hd_alloc)
     dt = jnp.dtype(dtype)
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
@@ -361,10 +379,17 @@ def paged_decode_attention(q, k_pages, v_pages, table, index: jax.Array,
             q, k_pages, v_pages, k_new, v_new, table, index,
             kv_index=_static_kv_index(kv_index))
     B = q.shape[0]
+    hd = q.shape[-1]
     NBT = table.shape[1]
     BS = k_pages.shape[1]
-    rows_k = jnp.take(k_pages, table, axis=0)         # (B, NBT, BS, KV, hd)
+    rows_k = jnp.take(k_pages, table, axis=0)         # (B, NBT, BS, KV, hdp)
     rows_v = jnp.take(v_pages, table, axis=0)
+    if rows_k.shape[-1] != hd:
+        # lane-aligned pool (hd padded to 128 at allocation): the padded
+        # tail is all-zero; slice AFTER the gather so only the (small)
+        # gathered rows are touched, never the whole pool
+        rows_k = rows_k[..., :hd]
+        rows_v = rows_v[..., :hd]
     kc = rows_k.reshape(B, NBT * BS, *rows_k.shape[3:])
     vc = rows_v.reshape(B, NBT * BS, *rows_v.shape[3:])
     return decode_attention(q, kc, vc, index[:, None, None, None],

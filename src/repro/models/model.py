@@ -158,6 +158,53 @@ class Model:
             last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)
         return last, cache
 
+    def prefill_at_sampled(self, params, batch, backend: str = "xla"
+                           ) -> tuple[jax.Array, dict]:
+        """``prefill_at`` with in-graph per-request sampling of the first
+        generated token.  ``batch`` additionally carries the (B,) sampling
+        vectors (see models/sampling.SAMPLING_KEYS); the token's absolute
+        position is the prompt length, so its PRNG key —
+        ``fold_in(PRNGKey(seed), length)`` — is identical on every
+        backend and across preempt/resume re-prefills.  Returns
+        ((B,) int32 tokens, cache)."""
+        from repro.models import sampling as sampling_lib
+        fwd = {k: v for k, v in batch.items()
+               if k not in sampling_lib.SAMPLING_KEYS}
+        last, cache = self.prefill_at(params, fwd, backend=backend)
+        if last.ndim != 3:
+            raise NotImplementedError(
+                "in-graph sampling supports single-codebook logits only")
+        toks = sampling_lib.sample_tokens(
+            last[:, -1, :], batch["temperature"], batch["top_k"],
+            batch["top_p"], batch["seed"], batch["length"])
+        return toks, cache
+
+    def decode_sampled(self, params, cache, batch, backend: str = "xla"
+                       ) -> tuple[jax.Array, dict]:
+        """``decode`` with in-graph per-request sampling fused into the
+        step: the returned value is the (B,) int32 next tokens, not
+        logits, so host code never re-implements the sampling math and
+        both HOST/ACCEL builds trace the identical transform.  The
+        sampled token's absolute position is ``index + 1`` (the fed
+        token's KV lands at ``index``; the new token sits one past it),
+        matching ``prefill_at_sampled``'s position convention.  The
+        sampling vectors are (B,) data leaves — one static compile
+        signature regardless of the request mix (binary.shape_key)."""
+        from repro.models import sampling as sampling_lib
+        fwd = {k: v for k, v in batch.items()
+               if k not in sampling_lib.SAMPLING_KEYS}
+        logits, new_cache = self.decode(params, cache, fwd, backend=backend)
+        if logits.ndim != 3:
+            raise NotImplementedError(
+                "in-graph sampling supports single-codebook logits only")
+        idx = batch["index"]
+        B = logits.shape[0]
+        pos = (idx if idx.ndim else jnp.broadcast_to(idx, (B,))) + 1
+        toks = sampling_lib.sample_tokens(
+            logits[:, -1, :], batch["temperature"], batch["top_k"],
+            batch["top_p"], batch["seed"], pos)
+        return toks, new_cache
+
     def decode(self, params, cache, batch, backend: str = "xla"
                ) -> tuple[jax.Array, dict]:
         """batch: {"tokens": (B,1)|(B,K,1), "index": scalar int32}.
@@ -201,11 +248,14 @@ class Model:
         cache["attn_v"] = jnp.zeros_like(cache["attn_k"])
         return cache
 
-    def init_paged_cache(self, num_blocks: int, block_size: int) -> dict:
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         lane_align: Optional[bool] = None) -> dict:
         """Block-pool KV cache (see attention.init_paged_kv_cache).
         ``num_blocks`` counts physical blocks, including the reserved
-        junk block 0.  Attention families only: ssm/hybrid carry
-        scan-state, not an addressable KV plane."""
+        junk block 0.  ``lane_align=None`` pads head_dim to the TPU lane
+        width when compiling natively (and leaves it alone in interpret
+        mode); pass True/False to force.  Attention families only:
+        ssm/hybrid carry scan-state, not an addressable KV plane."""
         cfg, geom = self.cfg, self.geom
         if cfg.family not in ("dense", "moe", "vlm", "audio"):
             raise NotImplementedError(
@@ -213,7 +263,8 @@ class Model:
         from repro.models.attention import init_paged_kv_cache
         return init_paged_kv_cache(cfg.num_layers, num_blocks, block_size,
                                    geom.kv_heads, cfg.resolved_head_dim,
-                                   cfg.kv_cache_dtype)
+                                   cfg.kv_cache_dtype,
+                                   lane_align=lane_align)
 
     def cache_specs(self, global_batch: Optional[int] = None) -> dict:
         cfg = self.cfg

@@ -402,7 +402,12 @@ def _write_kv_block(stack, new, li, blk, off):
     """Scatter the new token's KV (B,1,KV,hd) into layer ``li`` of the
     block pool at per-row (physical block, offset).  Rows sharing a
     target (inactive rows all hit junk block 0 offset 0) are benign:
-    nothing ever reads the junk block."""
+    nothing ever reads the junk block.  A lane-aligned pool (hd padded
+    to 128 at allocation) zero-pads the per-token write — cheap, unlike
+    padding the whole pool per read."""
+    if new.shape[-1] != stack.shape[-1]:
+        new = jnp.pad(new, ((0, 0),) * (new.ndim - 1)
+                      + ((0, stack.shape[-1] - new.shape[-1]),))
     return stack.at[li, blk, off].set(new[:, 0].astype(stack.dtype))
 
 

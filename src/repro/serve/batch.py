@@ -33,20 +33,30 @@ import itertools
 
 import numpy as np
 
-from repro.serve.scheduler import Request
+from repro.serve.api import GenerationRequest
 
 
 @dataclasses.dataclass
 class Slot:
-    """One occupied row of the batched decode."""
+    """One occupied row of the batched decode.
+
+    Besides the KV-addressing state, a slot carries the request's RNG
+    state implicitly (the sampling seed rides in ``request.sampling``;
+    the per-token key is a pure function of (seed, position), so
+    nothing mutable needs checkpointing across preemption) and the
+    metrics timestamps of its CURRENT occupancy (engine-loop clock;
+    the streaming handle keeps the across-preemption aggregate).
+    """
 
     index: int                 # row in the batched cache / decode batch
-    request: Request
+    request: GenerationRequest
     pos: int                   # next cache write position (= tokens cached)
     last_token: int            # token to feed at the next decode step
     tokens: list[int] = dataclasses.field(default_factory=list)
     blocks: list[int] = dataclasses.field(default_factory=list)  # paged only
     seq: int = 0               # admission order (preemption picks youngest)
+    t_admit: float = 0.0       # when this occupancy was admitted
+    t_last_token: float = 0.0  # when its latest token was sampled
 
     @property
     def done(self) -> bool:
@@ -86,7 +96,7 @@ class SlotManager:
     def has_free(self) -> bool:
         return bool(self._free)
 
-    def validate(self, request: Request) -> Request:
+    def validate(self, request: GenerationRequest) -> GenerationRequest:
         """Reject a request that cannot fit one cache row (the engine
         calls this at submission so callers fail fast, before a prefill
         or a slot is spent on it)."""
@@ -97,7 +107,7 @@ class SlotManager:
                 f"cache rows hold {self.max_seq}")
         return request
 
-    def admit(self, request: Request, first_token: int, *,
+    def admit(self, request: GenerationRequest, first_token: int, *,
               blocks: list[int] | None = None,
               tokens: list[int] | None = None,
               pos: int | None = None) -> Slot:
@@ -142,6 +152,26 @@ class SlotManager:
         for i, slot in self.active.items():
             idx[i] = slot.pos
         return idx
+
+    def sampling_vectors(self) -> dict[str, np.ndarray]:
+        """(max_slots,)-vector sampling leaves for the in-graph sampler
+        (models/sampling.sample_tokens): each active row carries its
+        request's spec; inactive rows pin to greedy/neutral values (their
+        sampled junk token is never read).  Always the same shapes and
+        dtypes, so the decode step's compile signature is static across
+        any request mix."""
+        temp = np.zeros((self.max_slots,), np.float32)
+        top_k = np.zeros((self.max_slots,), np.int32)
+        top_p = np.ones((self.max_slots,), np.float32)
+        seed = np.zeros((self.max_slots,), np.int32)
+        for i, slot in self.active.items():
+            sp = slot.request.sampling
+            temp[i] = sp.temperature
+            top_k[i] = sp.top_k
+            top_p[i] = sp.top_p
+            seed[i] = sp.seed
+        return {"temperature": temp, "top_k": top_k, "top_p": top_p,
+                "seed": seed}
 
     def active_slots(self) -> list[Slot]:
         return [self.active[i] for i in sorted(self.active)]
@@ -222,7 +252,7 @@ class PagedSlotManager(SlotManager):
         return {"reserved_positions": reserved, "used_positions": used,
                 "frag_positions": reserved - used}
 
-    def validate(self, request: Request) -> Request:
+    def validate(self, request: GenerationRequest) -> GenerationRequest:
         """Pool-level bound: the request's worst-case block count must fit
         the pool and the block table (NOT a per-row max_seq reservation —
         blocks are only taken as generation actually reaches them)."""
@@ -235,7 +265,7 @@ class PagedSlotManager(SlotManager):
                 f"/ {self.block_size}), pool+table allow {limit}")
         return request
 
-    def can_admit(self, prefill_len: int, request: Request) -> bool:
+    def can_admit(self, prefill_len: int, request: GenerationRequest) -> bool:
         """Block-exhaustion backpressure: admit when the prefill's blocks
         plus a one-block growth watermark are free.  Capped at the
         request's worst-case total so a pool-sized request is still

@@ -10,6 +10,17 @@ prefill of new arrivals interleaves with decode of in-flight ones, and
 finished slots are evicted and reused immediately (no head-of-line
 blocking on batch formation or on the batch's slowest request).
 
+Serve API v2 (see ``serve.api``): requests are ``GenerationRequest``s
+carrying a per-request ``SamplingParams``; ``submit`` returns a
+streaming ``RequestHandle`` (iterate / ``on_token`` callback /
+``result()``), ``abort`` cancels mid-stream, and completed requests
+come back as ``RequestOutput`` (tokens + finish reason + queue-wait /
+TTFT / TPOT metrics).  Sampling runs IN-GRAPH inside the jitted step
+functions (``models/sampling.py``): the decode step takes (B,)
+temperature/top_k/top_p/seed vectors and returns sampled tokens, so the
+compile signature is static across any request mix and the sampling
+math is identical on every backend.
+
 Xar-Trek integration: both engines can dispatch every prefill/decode
 step through an XarTrekRuntime so the scheduler (Algorithm 2) migrates
 steps between HOST/AUX/ACCEL as load changes — the Figure-6 throughput
@@ -19,7 +30,9 @@ multi-tenant arrival stream.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+import warnings
 from typing import Iterable, Optional
 
 import jax
@@ -31,8 +44,15 @@ from repro.core.function import MigratableFunction
 from repro.core.runtime import XarTrekRuntime
 from repro.core.targets import TargetKind
 from repro.models.model import build_model
+from repro.models.sampling import sampling_leaves
+from repro.serve.api import (
+    FINISH_ABORTED, FINISH_LENGTH, FINISH_STOP, GenerationRequest,
+    RequestHandle, RequestOutput, SamplingParams,
+)
 from repro.serve.batch import PagedSlotManager, Slot, SlotManager
-from repro.serve.scheduler import Request, RequestQueue
+from repro.serve.scheduler import RequestQueue
+
+_SERVE_DEPRECATION_WARNED = False
 
 
 @dataclasses.dataclass
@@ -142,10 +162,31 @@ class ContinuousBatchingEngine:
 
     ``max_slots`` is the decode width (rows of the batched cache);
     ``max_seq`` bounds prompt + generation length per slot.  Requests
-    arrive through ``submit``/``serve``; each engine loop iteration
+    arrive through ``submit``/``run``; each engine loop iteration
     admits arrived requests into free slots (one bucketed prefill each)
     and then advances every in-flight request by one token (one ragged
     decode across all slots, per-row cache positions).
+
+    **Serve API v2.**  ``submit(prompt_or_request, ...)`` returns a
+    ``RequestHandle``: iterate it (from another thread while ``run()``
+    drains) or attach ``on_token`` to stream tokens as they are
+    sampled; ``handle.result()`` / the dict ``run()`` returns carry
+    ``RequestOutput`` (tokens, finish_reason stop|length|aborted, and
+    queue-wait/TTFT/TPOT metrics).  ``abort(req_id)`` cancels a queued
+    or in-flight request: its slot — and, under paging, its KV blocks —
+    free the same loop iteration.  The v1 surface (``serve()`` dict of
+    bare token arrays, ``scheduler.Request``) remains as a deprecated
+    shim.
+
+    **In-graph sampling.**  Each request's ``SamplingParams``
+    (temperature/top_k/top_p/seed; temperature 0.0 = greedy) ride the
+    step batch as (B,) vectors and the jitted step returns sampled
+    tokens — one static decode signature for any request mix (no
+    per-request recompiles), and byte-identical seeded outputs across
+    HOST/ACCEL backends, forced mid-stream migration, and
+    preempt/resume (the per-token PRNG key is
+    ``fold_in(PRNGKey(seed), absolute_position)``; resume replays
+    stashed tokens, so only the KV is rebuilt).
 
     With ``paged=True`` the dense per-slot rows are replaced by a
     vLLM-style block pool (``block_size`` positions per block,
@@ -154,9 +195,10 @@ class ContinuousBatchingEngine:
     one-block watermark), decode allocates blocks on demand, and the
     youngest slot is preempted-and-resumed if the pool runs dry — so
     concurrency is bounded by tokens actually in flight, not by
-    ``max_slots x max_seq`` reservations.  Greedy tokens are
-    byte-identical to the dense engine when the attention spans match
-    (``ceil(max_seq/block_size)*block_size == max_seq``).
+    ``max_slots x max_seq`` reservations.  ``lane_align`` (default:
+    auto — on for native TPU, off in interpret mode) pads the pool's
+    head_dim to the TPU lane width at allocation so the ACCEL paged
+    kernel never copies the pool to pad it per call.
 
     A request whose ``stop_tokens`` fires finishes that step: its slot —
     and, under paging, its blocks — frees immediately for queued
@@ -185,10 +227,9 @@ class ContinuousBatchingEngine:
     step — benchmarks and tests use it to flip scheduler policy
     mid-stream (forced HOST->ACCEL->HOST migration schedules).
 
-    Greedy sampling, matching ``ServeEngine`` token-for-token on the
-    same prompts.  Row-independent attention families only: ssm/hybrid
-    caches cannot seek per-row, and moe routing couples rows through
-    the shared expert-capacity budget.
+    Row-independent attention families only: ssm/hybrid caches cannot
+    seek per-row, and moe routing couples rows through the shared
+    expert-capacity budget.
     """
 
     def __init__(self, cfg: ModelConfig, max_slots: int = 8,
@@ -199,6 +240,7 @@ class ContinuousBatchingEngine:
                  fn_prefix: str = "cb", min_bucket: int = 8,
                  paged: bool = False, block_size: int = 32,
                  num_blocks: Optional[int] = None,
+                 lane_align: Optional[bool] = None,
                  backend: str = "auto", eager_accel: bool = True,
                  on_step=None):
         if cfg.family not in ("dense", "vlm"):
@@ -234,7 +276,8 @@ class ContinuousBatchingEngine:
             nb = num_blocks or max_slots * (-(-max_seq // block_size))
             self.slots: SlotManager = PagedSlotManager(
                 max_slots, block_size, nb, max_seq=max_seq)
-            self.cache = self.model.init_paged_cache(nb + 1, block_size)
+            self.cache = self.model.init_paged_cache(nb + 1, block_size,
+                                                     lane_align=lane_align)
             # scatter a prefill's KV blocks into the pool at the slot's
             # physical block ids (one fused donated update, like the
             # dense row write below); jit specializes per block count
@@ -249,6 +292,10 @@ class ContinuousBatchingEngine:
                         p = jnp.pad(                # >= length are masked
                             p, ((0, 0), (0, tgt - p.shape[1])) +
                             ((0, 0),) * (p.ndim - 2))
+                    if p.shape[-1] != pool[k].shape[-1]:
+                        # lane-aligned pool: zero-pad the head_dim tail
+                        p = jnp.pad(p, ((0, 0),) * (p.ndim - 1)
+                                    + ((0, pool[k].shape[-1] - p.shape[-1]),))
                     p = p.reshape(p.shape[0], phys.shape[0], block_size,
                                   *p.shape[2:])
                     out[k] = pool[k].at[:, phys].set(p.astype(pool[k].dtype))
@@ -258,14 +305,16 @@ class ContinuousBatchingEngine:
             self.slots = SlotManager(max_slots, max_seq)
             self.cache = self.model.init_cache(max_slots, max_seq)
         # direct-path (no-runtime) step functions honour the backend
-        # selector; "auto" without a runtime serves on HOST math
+        # selector; "auto" without a runtime serves on HOST math.  Both
+        # steps sample IN-GRAPH and return tokens, not logits.
         direct = "pallas" if backend == "accel" else "xla"
         self._prefill = jax.jit(
-            lambda p, b: self.model.prefill_at(p, b, backend=direct))
+            lambda p, b: self.model.prefill_at_sampled(p, b, backend=direct))
         # donate the cache: without aliasing every token copies the full
         # (L, max_slots, max_seq, KV, hd) stack (see decode_attention)
         self._decode = jax.jit(
-            lambda p, c, b: self.model.decode(p, c, b, backend=direct),
+            lambda p, c, b: self.model.decode_sampled(p, c, b,
+                                                      backend=direct),
             donate_argnums=(1,))
         # one fused in-place write of a request's bucketed prefill KV into
         # its cache row (eager per-leaf updates would each materialize a
@@ -280,8 +329,12 @@ class ContinuousBatchingEngine:
             donate_argnums=(0,))
         self._prefill_name = f"{fn_prefix}_prefill"
         self._decode_name = f"{fn_prefix}_decode"
-        self.results: dict[int, np.ndarray] = {}
+        self.results: dict[int, RequestOutput] = {}
         self._resume: dict[int, list[int]] = {}   # req_id -> tokens so far
+        self._handles: dict[int, RequestHandle] = {}
+        self._abort_pending: set[int] = set()
+        self._abort_lock = threading.Lock()
+        self._clock0: Optional[float] = None
         self.reset_stats()
         if runtime is not None:
             self._prepare_runtime(runtime, fn_prefix, eager_accel)
@@ -292,15 +345,23 @@ class ContinuousBatchingEngine:
         self.stats = {"prefills": 0, "decode_steps": 0,
                       "decode_row_util": 0.0}
 
+    def _now(self) -> float:
+        """Engine-loop clock (seconds since the current run() started)."""
+        if self._clock0 is None:
+            return 0.0
+        return time.perf_counter() - self._clock0
+
     # ------------------------------------------------- runtime plumbing
     def _prepare_runtime(self, rt: XarTrekRuntime, fn_prefix: str,
                          eager_accel: bool) -> None:
         def step_fns(impl: str):
             def prefill_fn(params, batch):
-                return self.model.prefill_at(params, batch, backend=impl)
+                return self.model.prefill_at_sampled(params, batch,
+                                                     backend=impl)
 
             def decode_fn(params, cache, batch):
-                return self.model.decode(params, cache, batch, backend=impl)
+                return self.model.decode_sampled(params, cache, batch,
+                                                 backend=impl)
 
             return prefill_fn, decode_fn
 
@@ -329,12 +390,15 @@ class ContinuousBatchingEngine:
                 rt.registry.register(MigratableFunction(
                     name, name,
                     {TargetKind.HOST: host_fn, TargetKind.ACCEL: accel_fn}))
+        greedy = SamplingParams()
         ex_prefill = (self.params,
                       {"tokens": jnp.zeros((1, self.min_bucket), jnp.int32),
-                       "length": jnp.ones((1,), jnp.int32)})
+                       "length": jnp.ones((1,), jnp.int32),
+                       **sampling_leaves(greedy, 1)})
         dec_batch = {"tokens": jnp.zeros((self.slots.max_slots, 1),
                                          jnp.int32),
-                     "index": jnp.zeros((self.slots.max_slots,), jnp.int32)}
+                     "index": jnp.zeros((self.slots.max_slots,), jnp.int32),
+                     **sampling_leaves(greedy, self.slots.max_slots)}
         if self.paged:
             # paged decode keys its compile on the block-table shape too;
             # steady state is one static signature (see binary.shape_key)
@@ -346,14 +410,88 @@ class ContinuousBatchingEngine:
                    eager_accel=eager_accel)
 
     # -------------------------------------------------------- admission
-    def submit(self, prompt, max_new_tokens: int = 16,
-               arrival_s: float = 0.0) -> int:
-        # validate at submission, not mid-serve: a request that cannot
-        # fit a cache row would otherwise fail only once a slot frees
-        return self.queue.submit(self.slots.validate(
-            Request(np.asarray(prompt), max_new_tokens, arrival_s)))
+    def submit(self, request, max_new_tokens: int = 16,
+               arrival_s: float = 0.0, stop_tokens: tuple = (),
+               sampling: Optional[SamplingParams] = None,
+               on_token=None) -> RequestHandle:
+        """Enqueue one request; returns its streaming ``RequestHandle``.
 
-    def _can_admit(self, req: Request) -> bool:
+        ``request`` is a ``GenerationRequest`` (the remaining kwargs are
+        ignored then) or a bare prompt array, in which case EVERY
+        request field routes through — max_new_tokens, arrival time,
+        stop_tokens AND the sampling spec (the v1 engine silently
+        dropped ``stop_tokens`` here).  Validates at submission, not
+        mid-serve: a request that cannot fit a cache row would otherwise
+        fail only once a slot frees."""
+        if not isinstance(request, GenerationRequest):
+            request = GenerationRequest(
+                np.asarray(request), max_new_tokens=max_new_tokens,
+                arrival_s=arrival_s, stop_tokens=stop_tokens,
+                sampling=sampling or SamplingParams())
+        self.queue.submit(self.slots.validate(request))
+        return self._handle_for(request, on_token=on_token)
+
+    def _handle_for(self, req: GenerationRequest,
+                    on_token=None) -> RequestHandle:
+        h = self._handles.get(req.req_id)
+        if h is None:
+            h = self._handles[req.req_id] = RequestHandle(
+                req, engine=self, on_token=on_token)
+        elif on_token is not None:
+            h.on_token = on_token
+        return h
+
+    def abort(self, req_id: int) -> bool:
+        """Cancel a queued or in-flight request.  Its handle finishes
+        with ``finish_reason="aborted"`` and whatever tokens were
+        generated; an in-flight slot — and, under paging, its KV blocks
+        — frees at the next loop iteration.  Returns False if the
+        request is unknown or already finished.
+
+        Thread-safe: the caller only MARKS the abort; all engine state
+        (queue, slots, results) is touched by the loop thread in
+        ``_service_aborts`` — except when no loop is running, in which
+        case the abort is serviced inline."""
+        handle = self._handles.get(req_id)
+        if handle is None or handle.finished or req_id in self.results:
+            return False
+        with self._abort_lock:
+            self._abort_pending.add(req_id)
+        if self._clock0 is None:       # no loop running: service inline
+            self._service_aborts(self._now())
+        return True
+
+    def _service_aborts(self, now: float) -> None:
+        """Loop-thread half of ``abort``: finish aborted requests
+        wherever they currently live — an active slot (release it;
+        paged: frees its blocks), the queue (remove it, covering both
+        never-admitted and preempted-awaiting-resume requests), or
+        already finished (drop the mark).  A request caught mid-admission
+        stays pending and is serviced next iteration."""
+        with self._abort_lock:
+            pending = set(self._abort_pending)
+        for req_id in pending:
+            done = False
+            for slot in list(self.slots.active.values()):
+                if slot.request.req_id == req_id:
+                    self._sync_handle(slot, now)
+                    self._finalize(self._handle_for(slot.request),
+                                   FINISH_ABORTED, now)
+                    self.slots.release(slot)   # paged: frees blocks too
+                    done = True
+                    break
+            if not done:
+                req = self.queue.remove(req_id)
+                if req is not None:
+                    self._resume.pop(req_id, None)
+                    self._finalize(self._handle_for(req), FINISH_ABORTED,
+                                   now)
+                    done = True
+            if done or req_id in self.results:
+                with self._abort_lock:
+                    self._abort_pending.discard(req_id)
+
+    def _can_admit(self, req: GenerationRequest) -> bool:
         """Admission capacity beyond a free row: the paged pool must hold
         the prefill's blocks plus a growth watermark (block-exhaustion
         backpressure replaces the dense engine's slot-count-only gate)."""
@@ -363,11 +501,12 @@ class ContinuousBatchingEngine:
         plen = req.prompt_len + (len(resume) - 1 if resume else 0)
         return self.slots.can_admit(plen, req)
 
-    def _admit(self, req: Request) -> None:
+    def _admit(self, req: GenerationRequest, now: float = 0.0) -> None:
         # resume of a preempted request: the cache must again hold
-        # prompt + generated-so-far, so re-prefill over both; greedy
-        # decoding makes the recomputation bit-compatible with the
-        # original KV (same math, same weights)
+        # prompt + generated-so-far, so re-prefill over both; the replayed
+        # tokens were already sampled (and streamed), so the recomputation
+        # is bit-compatible with the original KV regardless of the
+        # request's sampling spec (same math, same weights, same tokens)
         resume = self._resume.pop(req.req_id, None)
         if resume is None:
             feed = req.prompt
@@ -379,18 +518,20 @@ class ContinuousBatchingEngine:
         toks = np.zeros((1, Sb), np.int32)
         toks[0, :S] = feed
         batch = {"tokens": jnp.asarray(toks),
-                 "length": jnp.full((1,), S, jnp.int32)}
+                 "length": jnp.full((1,), S, jnp.int32),
+                 **sampling_leaves(req.sampling, 1)}
         if self.runtime is not None:
-            logits, pc = self.runtime.call(self._prefill_name,
-                                           self.params, batch)
+            tok0, pc = self.runtime.call(self._prefill_name,
+                                         self.params, batch)
         else:
-            logits, pc = self._prefill(self.params, batch)
+            tok0, pc = self._prefill(self.params, batch)
         self.stats["prefills"] += 1
         if resume is None:
-            first, tokens = int(np.asarray(jnp.argmax(logits[0, -1]))), None
+            # first token sampled IN-GRAPH at position = prompt length
+            first, tokens = int(np.asarray(tok0)[0]), None
         else:
             # the pending token was already sampled before preemption;
-            # the resume prefill only rebuilds the KV (logits unused)
+            # the resume prefill only rebuilds the KV (its token unused)
             first, tokens = resume[-1], resume
         if self.paged:
             blocks = self.slots.pool.alloc(self.slots.blocks_for(S))
@@ -412,18 +553,48 @@ class ContinuousBatchingEngine:
                                               axis=2) for k in pc}
             self.cache = self._write_slot(self.cache, pc,
                                           jnp.int32(slot.index))
+        slot.t_admit = now
+        handle = self._handle_for(req)
+        if handle.t_admit is None:     # first admission only (not resume)
+            handle.t_admit = now
+        # the first token was just forced out of the prefill: timestamp it
+        # AFTER the prefill so TTFT includes prefill latency
+        t_tok = self._now()
+        slot.t_last_token = t_tok
+        self._sync_handle(slot, t_tok)
         if slot.done:            # max_new_tokens reached or stop token
-            self._finish(slot)
+            self._finish(slot, t_tok)
 
-    def _finish(self, slot: Slot) -> None:
-        self.results[slot.request.req_id] = np.asarray(slot.tokens, np.int32)
+    def _sync_handle(self, slot: Slot, now: float) -> None:
+        """Stream any not-yet-emitted tokens to the request's handle.
+        Resume replays stashed tokens into the slot; the handle's
+        already-pushed count keeps them from re-emitting."""
+        handle = self._handles.get(slot.request.req_id)
+        if handle is None:
+            return
+        for tok in slot.tokens[len(handle.tokens):]:
+            handle._push(int(tok), now)
+
+    def _finalize(self, handle: RequestHandle, reason: str,
+                  now: float) -> None:
+        self.results[handle.req_id] = handle._finish(reason, now)
+
+    def _finish(self, slot: Slot, now: float = 0.0) -> None:
+        self._sync_handle(slot, now)
+        reason = (FINISH_STOP
+                  if slot.tokens and slot.request.stops(slot.tokens[-1])
+                  and len(slot.tokens) <= slot.request.max_new_tokens
+                  else FINISH_LENGTH)
+        self._finalize(self._handle_for(slot.request), reason, now)
         self.slots.release(slot)
 
     # ----------------------------------------------------------- decode
     def _preempt(self, slot: Slot) -> None:
         """Evict a live slot to relieve pool pressure: stash its generated
         tokens, free its blocks, requeue the request at the front.  The
-        resume path re-prefills prompt+generated, so output is unchanged."""
+        resume path re-prefills prompt+generated, so output is unchanged
+        (sampled tokens replay from the stash; sampling keys depend only
+        on (seed, position), so post-resume draws are unchanged too)."""
         self._resume[slot.request.req_id] = list(slot.tokens)
         self.slots.preempt(slot)
         self.queue.requeue(slot.request)
@@ -454,65 +625,102 @@ class ContinuousBatchingEngine:
         if not active:                     # everything was preempted
             return
         batch = {"tokens": jnp.asarray(self.slots.token_vector()),
-                 "index": jnp.asarray(self.slots.index_vector())}
+                 "index": jnp.asarray(self.slots.index_vector()),
+                 **self.slots.sampling_vectors()}
         if self.paged:
             batch["block_table"] = jnp.asarray(self.slots.block_table())
         if self.runtime is not None:
-            logits, self.cache = self.runtime.call(
+            toks, self.cache = self.runtime.call(
                 self._decode_name, self.params, self.cache, batch)
         else:
-            logits, self.cache = self._decode(self.params, self.cache, batch)
+            toks, self.cache = self._decode(self.params, self.cache, batch)
         self.stats["decode_steps"] += 1
         self.stats["decode_row_util"] += len(active) / self.slots.max_slots
-        toks = np.asarray(jnp.argmax(logits[:, -1:], axis=-1))   # (B, 1)
+        toks = np.asarray(toks)            # (B,) sampled in-graph
+        now = self._now()
         for slot in active:
-            t = int(toks[slot.index, 0])
+            t = int(toks[slot.index])
             slot.tokens.append(t)
             slot.last_token = t
             slot.pos += 1
+            slot.t_last_token = now
+            self._sync_handle(slot, now)
             if slot.done:
-                self._finish(slot)
+                self._finish(slot, now)
 
     # ------------------------------------------------------- serve loop
-    def serve(self, requests: Iterable[Request] = (),
-              poll_s: float = 0.002) -> dict[int, np.ndarray]:
+    def run(self, requests: Iterable[GenerationRequest] = (),
+            poll_s: float = 0.002) -> dict[int, RequestOutput]:
         """Drain ``requests`` plus anything already submitted; returns
-        {req_id: (max_new_tokens,) int32 tokens} for the requests
-        completed by THIS call (``self.results`` is drained, so a
-        long-lived engine doesn't accumulate finished token arrays).
-        Arrival times are relative to this call's start."""
-        for r in requests:
-            self.queue.submit(self.slots.validate(r))
-        t0 = time.perf_counter()
-        while len(self.queue) or self.slots.active:
-            now = time.perf_counter() - t0
-            while self.slots.has_free():
-                req = self.queue.pop_arrived(now)
-                if req is None:
-                    break
-                if not self._can_admit(req):
-                    # block-exhaustion backpressure: head-of-queue waits
-                    # (front of its arrival cohort) for blocks to free
-                    self.queue.requeue(req)
-                    break
-                self._admit(req)
-            if self.slots.active:
-                self._decode_step()
-                if self.on_step is not None:
-                    self.on_step(self)
-            else:
-                nxt = self.queue.next_arrival()
-                if nxt is None:
-                    break
-                time.sleep(min(max(nxt - now, 0.0), 0.05) + poll_s)
+        {req_id: RequestOutput} for the requests completed by THIS call
+        (``self.results`` is drained, so a long-lived engine doesn't
+        accumulate finished outputs; aborts serviced between calls are
+        included).  Arrival times are relative to this call's start.
+
+        If the loop raises, every unfinished handle is finished as
+        ``aborted`` before re-raising, so streaming consumers blocked on
+        another thread never hang on a dead engine loop."""
+        try:
+            for r in requests:
+                self.queue.submit(self.slots.validate(r))
+                self._handle_for(r)
+            self._clock0 = time.perf_counter()
+            while len(self.queue) or self.slots.active:
+                now = self._now()
+                self._service_aborts(now)
+                while self.slots.has_free():
+                    req = self.queue.pop_arrived(now)
+                    if req is None:
+                        break
+                    if not self._can_admit(req):
+                        # block-exhaustion backpressure: head-of-queue
+                        # waits (front of its arrival cohort) for blocks
+                        self.queue.requeue(req)
+                        break
+                    self._admit(req, now)
+                if self.slots.active:
+                    self._decode_step()
+                    if self.on_step is not None:
+                        self.on_step(self)
+                else:
+                    nxt = self.queue.next_arrival()
+                    if nxt is None:
+                        break
+                    time.sleep(min(max(nxt - now, 0.0), 0.05) + poll_s)
+        except BaseException:
+            for h in list(self._handles.values()):
+                if not h.finished:
+                    self._finalize(h, FINISH_ABORTED, self._now())
+            raise
+        finally:
+            self._clock0 = None
         out, self.results = self.results, {}
+        for rid in out:
+            self._handles.pop(rid, None)
         return out
 
-    def generate(self, prompts, max_new_tokens: int = 16) -> np.ndarray:
+    def serve(self, requests: Iterable[GenerationRequest] = (),
+              poll_s: float = 0.002) -> dict[int, np.ndarray]:
+        """Deprecated v1 surface: like ``run()`` but returns bare
+        {req_id: (n,) int32 token arrays} without finish reasons or
+        metrics.  Warns once per process; use ``run()``."""
+        global _SERVE_DEPRECATION_WARNED
+        if not _SERVE_DEPRECATION_WARNED:
+            _SERVE_DEPRECATION_WARNED = True
+            warnings.warn(
+                "ContinuousBatchingEngine.serve() returning bare token "
+                "arrays is deprecated; use run() -> RequestOutput",
+                DeprecationWarning, stacklevel=2)
+        return {rid: out.tokens
+                for rid, out in self.run(requests, poll_s=poll_s).items()}
+
+    def generate(self, prompts, max_new_tokens: int = 16,
+                 sampling: Optional[SamplingParams] = None) -> np.ndarray:
         """ServeEngine.generate-compatible convenience: all prompts
         arrive at t=0; returns (B, max_new_tokens) tokens in order.
-        (Stop-token requests can return ragged lengths — use serve().)"""
-        reqs = [Request(np.asarray(p), max_new_tokens)
+        (Stop-token requests can return ragged lengths — use run().)"""
+        reqs = [GenerationRequest(np.asarray(p), max_new_tokens,
+                                  sampling=sampling or SamplingParams())
                 for p in np.asarray(prompts)]
-        out = self.serve(reqs)
-        return np.stack([out[r.req_id] for r in reqs])
+        out = self.run(reqs)
+        return np.stack([out[r.req_id].tokens for r in reqs])

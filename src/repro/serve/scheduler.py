@@ -1,78 +1,71 @@
 """Request admission for continuous-batching serving.
 
-A ``Request`` is one generation job (prompt + token budget) with an
-arrival time; the ``RequestQueue`` is the multi-tenant arrival stream of
-the paper's Figure-6 throughput experiment — requests become visible to
-the engine only once the serving clock passes their ``arrival_s``, and
-are admitted FIFO among the arrived.
+A ``GenerationRequest`` (see ``serve.api``) is one generation job
+(prompt + sampling spec + token budget) with an arrival time; the
+``RequestQueue`` is the multi-tenant arrival stream of the paper's
+Figure-6 throughput experiment — requests become visible to the engine
+only once the serving clock passes their ``arrival_s``, and are
+admitted FIFO among the arrived.
 
 The queue is thread-safe so a driver thread can keep submitting while
 the engine loop drains (the single-process analogue of the paper's
 socket-connected applications).
+
+``Request`` is the v1 name, kept as a thin deprecated shim over
+``GenerationRequest`` (same fields, same positional order; ``sampling``
+defaults to greedy).
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
 import itertools
 import random
 import threading
+import warnings
 from typing import Iterable, Optional
 
-import numpy as np
+from repro.serve.api import GenerationRequest
+
+_REQUEST_DEPRECATION_WARNED = False
 
 
-@dataclasses.dataclass
-class Request:
-    """One generation job.  ``prompt``: (S,) int32 token ids.
+class Request(GenerationRequest):
+    """Deprecated v1 alias of ``serve.api.GenerationRequest``.
 
-    ``stop_tokens``: generation ends the step any of these ids is
-    emitted (the stop token is included in the output), freeing the
-    request's slot — and, under paging, its KV blocks — immediately
-    instead of running out the full ``max_new_tokens`` budget.
+    Identical fields and behaviour (``sampling`` defaults to greedy
+    temperature-0.0); new code should construct ``GenerationRequest``
+    directly.  Warns once per process.
     """
 
-    prompt: np.ndarray
-    max_new_tokens: int = 16
-    arrival_s: float = 0.0
-    stop_tokens: tuple = ()
-    req_id: int = dataclasses.field(
-        default_factory=itertools.count().__next__)
-
     def __post_init__(self):
-        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
-        if self.prompt.size == 0:
-            raise ValueError("empty prompt")
-        if self.max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
-        self.stop_tokens = tuple(int(t) for t in (self.stop_tokens or ()))
-
-    @property
-    def prompt_len(self) -> int:
-        return int(self.prompt.shape[0])
-
-    def stops(self, token: int) -> bool:
-        return token in self.stop_tokens
+        global _REQUEST_DEPRECATION_WARNED
+        if not _REQUEST_DEPRECATION_WARNED:
+            _REQUEST_DEPRECATION_WARNED = True
+            warnings.warn(
+                "serve.Request is deprecated; use serve.GenerationRequest "
+                "(with serve.SamplingParams) instead",
+                DeprecationWarning, stacklevel=3)
+        super().__post_init__()
 
 
 class RequestQueue:
     """Arrival-time-ordered FIFO of pending requests."""
 
-    def __init__(self, requests: Iterable[Request] = ()):
+    def __init__(self, requests: Iterable[GenerationRequest] = ()):
         self._lock = threading.Lock()
-        self._heap: list[tuple[float, int, Request]] = []
+        self._heap: list[tuple[float, int, GenerationRequest]] = []
         self._seq = itertools.count()     # FIFO tie-break among same-time
         self._front = itertools.count(start=-1, step=-1)
         for r in requests:
             self.submit(r)
 
-    def submit(self, request: Request) -> int:
+    def submit(self, request: GenerationRequest) -> int:
         with self._lock:
             heapq.heappush(self._heap,
                            (request.arrival_s, next(self._seq), request))
         return request.req_id
 
-    def requeue(self, request: Request) -> int:
+    def requeue(self, request: GenerationRequest) -> int:
         """Put a popped request back at the FRONT of its arrival cohort
         (engine backpressure: admission was attempted but capacity — e.g.
         the KV block pool — was not available, or the request was
@@ -82,11 +75,22 @@ class RequestQueue:
                            (request.arrival_s, next(self._front), request))
         return request.req_id
 
-    def pop_arrived(self, now: float) -> Optional[Request]:
+    def pop_arrived(self, now: float) -> Optional[GenerationRequest]:
         """Earliest-arrived request with arrival_s <= now, else None."""
         with self._lock:
             if self._heap and self._heap[0][0] <= now:
                 return heapq.heappop(self._heap)[2]
+            return None
+
+    def remove(self, req_id: int) -> Optional[GenerationRequest]:
+        """Pull a pending request out of the queue (abort before
+        admission).  Returns it, or None if not queued."""
+        with self._lock:
+            for i, (_, _, r) in enumerate(self._heap):
+                if r.req_id == req_id:
+                    entry = self._heap.pop(i)
+                    heapq.heapify(self._heap)
+                    return entry[2]
             return None
 
     def next_arrival(self) -> Optional[float]:

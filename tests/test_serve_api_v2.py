@@ -1,0 +1,417 @@
+"""Serve API v2: SamplingParams / GenerationRequest / RequestOutput,
+streaming handles, abort, in-graph per-request sampling determinism
+(HOST vs ACCEL, forced mid-stream migration, preempt/resume), the
+single static decode compile signature, the lane-aligned paged pool,
+and the v1 deprecation shims."""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduced
+from repro.core.function import FunctionRegistry
+from repro.core.runtime import XarTrekRuntime
+from repro.serve import (
+    ContinuousBatchingEngine, GenerationRequest, RequestOutput,
+    SamplingParams, ServeEngine,
+)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(reduced(ARCHS["smollm-135m"]),
+                               dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def sync_engine(cfg):
+    return ServeEngine(cfg, seed=0)
+
+
+def _prompts(cfg, B, S, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return np.asarray(jax.random.randint(key, (B, S), 0, cfg.vocab_size,
+                                         jnp.int32))
+
+
+SAMPLED = SamplingParams(temperature=0.9, top_k=50, top_p=0.95, seed=7)
+
+
+# ------------------------------------------------------------------ types
+
+def test_sampling_params_validation():
+    SamplingParams()                                 # greedy default
+    SamplingParams(temperature=1.5, top_k=40, top_p=0.9, seed=3)
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=1.5)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+
+
+def test_request_output_validates_finish_reason():
+    out = RequestOutput(req_id=1, tokens=[1, 2], finish_reason="stop")
+    assert out.n_tokens == 2 and out.tokens.dtype == np.int32
+    with pytest.raises(ValueError, match="finish_reason"):
+        RequestOutput(req_id=1, tokens=[1], finish_reason="eof")
+
+
+# ------------------------------------------------- submit() field routing
+
+def test_submit_routes_all_request_fields(cfg, sync_engine):
+    """Regression: the v1 submit() dropped stop_tokens on the floor.
+    Every field — stop budget, arrival, sampling — must route through."""
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                  params=sync_engine.params)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    # find the greedy second token, then stop on it
+    ref = cb.run([GenerationRequest(prompt, max_new_tokens=5)])
+    stop_tok = int(next(iter(ref.values())).tokens[1])
+
+    sp = SamplingParams(temperature=0.0, seed=9)
+    h = cb.submit(prompt, max_new_tokens=5, arrival_s=0.01,
+                  stop_tokens=(stop_tok,), sampling=sp)
+    req = h.request
+    assert req.stop_tokens == (stop_tok,)
+    assert req.max_new_tokens == 5
+    assert req.arrival_s == 0.01
+    assert req.sampling is sp
+    out = cb.run()[h.req_id]
+    assert out.finish_reason == "stop"
+    assert out.n_tokens == 2 and int(out.tokens[-1]) == stop_tok
+
+
+def test_submit_accepts_generation_request(cfg, sync_engine):
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                  params=sync_engine.params)
+    req = GenerationRequest(np.arange(1, 6, dtype=np.int32),
+                            max_new_tokens=2)
+    h = cb.submit(req)
+    assert h.request is req
+    out = cb.run()
+    assert out[req.req_id].finish_reason == "length"
+
+
+# --------------------------------------------------- greedy back-compat
+
+def test_temperature_zero_matches_greedy_sync_engine(cfg, sync_engine):
+    """temperature=0.0 must be byte-identical to the pre-v2 greedy
+    engines (argmax over raw logits, sampled path bypassed)."""
+    prompts = _prompts(cfg, B=4, S=12)
+    want = sync_engine.generate(jnp.asarray(prompts),
+                                max_new_tokens=6).tokens
+    cb = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=64,
+                                  params=sync_engine.params)
+    got = cb.generate(prompts, max_new_tokens=6,
+                      sampling=SamplingParams(temperature=0.0, seed=42))
+    np.testing.assert_array_equal(want, got)
+
+
+# --------------------------------------------------- seeded determinism
+
+def test_sampled_deterministic_and_distinct_from_greedy(cfg, sync_engine):
+    prompts = _prompts(cfg, B=4, S=12)
+    cb = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=64,
+                                  params=sync_engine.params)
+    a = cb.generate(prompts, max_new_tokens=6, sampling=SAMPLED)
+    b = cb.generate(prompts, max_new_tokens=6, sampling=SAMPLED)
+    np.testing.assert_array_equal(a, b)
+    greedy = cb.generate(prompts, max_new_tokens=6)
+    assert not np.array_equal(a, greedy)
+
+
+def test_sampled_independent_of_batch_composition(cfg, sync_engine):
+    """The PRNG key is fold_in(seed, absolute position) — slot index and
+    neighbours must not change a request's tokens."""
+    prompt = np.arange(1, 13, dtype=np.int32)
+    sp = SamplingParams(temperature=0.8, top_k=30, seed=11)
+    solo = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=64,
+                                    params=sync_engine.params)
+    alone = solo.run([GenerationRequest(prompt, 6, sampling=sp)])
+    want = next(iter(alone.values())).tokens
+    crowd = [GenerationRequest(_prompts(cfg, 1, 9, seed=i)[0], 6,
+                               sampling=SamplingParams(temperature=1.2,
+                                                       seed=50 + i))
+             for i in range(3)]
+    target = GenerationRequest(prompt, 6, sampling=sp)
+    out = solo.run(crowd + [target])
+    np.testing.assert_array_equal(want, out[target.req_id].tokens)
+
+
+def test_sampled_host_vs_accel_byte_identical(cfg, sync_engine):
+    """Same seed => identical tokens on the XLA and Pallas builds, dense
+    ragged and paged (in-kernel streaming) alike."""
+    prompts = _prompts(cfg, B=4, S=12)
+    host = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=64,
+                                    params=sync_engine.params,
+                                    backend="host")
+    want = host.generate(prompts, max_new_tokens=6, sampling=SAMPLED)
+    for kw in ({}, {"paged": True, "block_size": 16}):
+        accel = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=64,
+                                         params=sync_engine.params,
+                                         backend="accel", **kw)
+        got = accel.generate(prompts, max_new_tokens=6, sampling=SAMPLED)
+        np.testing.assert_array_equal(want, got, err_msg=str(kw))
+
+
+def test_sampled_midstream_migration_byte_identical(cfg, sync_engine):
+    """Forced HOST -> ACCEL -> HOST while sampled requests are live:
+    tokens must match the no-migration run, both backends must really
+    serve decode steps, and decode must keep ONE static compile
+    signature (no shape-bucket recompiles, one compile per target)."""
+    prompts = _prompts(cfg, B=4, S=12)
+    host = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=64,
+                                    params=sync_engine.params,
+                                    backend="host", paged=True,
+                                    block_size=16)
+    want = host.generate(prompts, max_new_tokens=6, sampling=SAMPLED)
+
+    rt = XarTrekRuntime(registry=FunctionRegistry(), policy="always_host")
+
+    def flip(engine):
+        s = engine.stats["decode_steps"]
+        if s == 1:
+            rt.server.policy = "always_accel"
+        elif s == 3:
+            rt.server.policy = "always_host"
+
+    mig = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=64,
+                                   params=sync_engine.params, runtime=rt,
+                                   paged=True, block_size=16, on_step=flip,
+                                   fn_prefix="smig")
+    got = mig.generate(prompts, max_new_tokens=6, sampling=SAMPLED)
+    np.testing.assert_array_equal(want, got)
+
+    decode = rt.summary()["per_function"]["smig_decode"]
+    assert decode["calls"].get("host", 0) >= 1
+    assert decode["calls"].get("accel", 0) >= 1
+    assert decode["migrations"] >= 2
+    # one static signature: the eagerly-compiled default served every
+    # step on both targets — no per-request recompiles
+    binary = rt.binaries["smig_decode"]
+    assert binary.shape_stats["misses"] == 0
+    assert binary.compile_stats[list(binary.compile_stats)[0]]["compiles"] == 1
+    for stats in binary.compile_stats.values():
+        assert stats["compiles"] == 1
+
+
+def test_sampled_preempt_resume_byte_identical(cfg, sync_engine):
+    """A pool too small for two long sampled generations forces preempt +
+    resume-by-recompute; the stashed-token replay plus position-keyed
+    sampling keeps tokens byte-identical to the unpressured run."""
+    rng = np.random.RandomState(3)
+    p1 = rng.randint(0, cfg.vocab_size, size=4)
+    p2 = rng.randint(0, cfg.vocab_size, size=4)
+    specs = [SamplingParams(temperature=0.8, top_k=30, seed=21),
+             SamplingParams(temperature=1.1, top_p=0.9, seed=22)]
+    mk = lambda: [GenerationRequest(p, 12, sampling=s)
+                  for p, s in zip((p1, p2), specs)]
+    roomy = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=24,
+                                     params=sync_engine.params,
+                                     paged=True, block_size=4,
+                                     fn_prefix="roomy")
+    ra = mk()
+    want = roomy.run(ra)
+    assert roomy.slots.stats["preempted"] == 0
+    small = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=24,
+                                     params=sync_engine.params,
+                                     paged=True, block_size=4, num_blocks=6,
+                                     fn_prefix="small")
+    rb = mk()
+    got = small.run(rb)
+    assert small.slots.stats["preempted"] >= 1
+    for a, b in zip(ra, rb):
+        np.testing.assert_array_equal(want[a.req_id].tokens,
+                                      got[b.req_id].tokens)
+    assert small.slots.pool.blocks_in_use() == 0
+
+
+# ------------------------------------------------------------- streaming
+
+def test_streaming_iterator_and_callback(cfg, sync_engine):
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                  params=sync_engine.params)
+    h1 = cb.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=5)
+    seen = []
+    h2 = cb.submit(np.arange(2, 9, dtype=np.int32), max_new_tokens=4,
+                   on_token=seen.append)
+    t = threading.Thread(target=cb.run)
+    t.start()
+    streamed = list(h1)              # blocks until end-of-stream
+    t.join()
+    out1 = h1.result(timeout=1.0)
+    assert streamed == list(out1.tokens)
+    assert out1.finish_reason == "length" and out1.n_tokens == 5
+    assert seen == list(h2.result(timeout=1.0).tokens)
+    assert h1.finished and h2.finished
+
+
+def test_request_output_metrics(cfg, sync_engine):
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                  params=sync_engine.params)
+    h = cb.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=4)
+    out = cb.run()[h.req_id]
+    assert out.queue_wait_s >= 0.0
+    assert out.ttft_s >= out.queue_wait_s      # TTFT includes the prefill
+    assert out.tpot_s > 0.0                    # 4 tokens -> 3 decode gaps
+
+
+# ----------------------------------------------------------------- abort
+
+def test_abort_midstream_frees_slot_and_blocks(cfg, sync_engine):
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                  params=sync_engine.params,
+                                  paged=True, block_size=16)
+    box = {}
+
+    def stopper(tok):
+        if len(box["h"].tokens) >= 2:
+            box["h"].abort()
+
+    box["h"] = cb.submit(np.arange(1, 9, dtype=np.int32),
+                         max_new_tokens=12, on_token=stopper)
+    out = cb.run()[box["h"].req_id]
+    assert out.finish_reason == "aborted"
+    assert 2 <= out.n_tokens < 12              # cut well short of budget
+    assert not cb.slots.active
+    assert cb.slots.pool.blocks_in_use() == 0  # blocks freed mid-stream
+
+
+def test_abort_preempted_request_finishes_aborted(cfg, sync_engine):
+    """An abort landing while the target is preempted (requeued with a
+    token stash, no active slot) must still finish it as aborted — and
+    must not disturb the surviving request's tokens."""
+    rng = np.random.RandomState(3)
+    p1 = rng.randint(0, cfg.vocab_size, size=4)
+    p2 = rng.randint(0, cfg.vocab_size, size=4)
+    roomy = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=24,
+                                     params=sync_engine.params,
+                                     paged=True, block_size=4,
+                                     fn_prefix="ar")
+    ra, rb = (GenerationRequest(p, 12) for p in (p1, p2))
+    want = roomy.run([ra, rb])
+
+    small = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=24,
+                                     params=sync_engine.params,
+                                     paged=True, block_size=4, num_blocks=6,
+                                     fn_prefix="as")
+    sa, sb = (GenerationRequest(p, 12) for p in (p1, p2))
+    state = {}
+
+    def on_step(eng):
+        # the instant a preemption stashes a request, abort THAT request
+        if eng._resume and "aborted" not in state:
+            rid = next(iter(eng._resume))
+            state["aborted"] = rid
+            state["stash_len"] = len(eng._resume[rid])
+            assert eng.abort(rid)
+
+    small.on_step = on_step
+    got = small.run([sa, sb])
+    assert "aborted" in state, "pool never forced a preemption"
+    rid = state["aborted"]
+    survivor, wsurv = ((sb, rb) if rid == sa.req_id else (sa, ra))
+    assert got[rid].finish_reason == "aborted"
+    assert got[rid].n_tokens == state["stash_len"]  # kept its stash
+    # the survivor is unaffected and byte-identical to the roomy run
+    np.testing.assert_array_equal(want[wsurv.req_id].tokens,
+                                  got[survivor.req_id].tokens)
+    assert small.slots.pool.blocks_in_use() == 0
+
+
+def test_run_exception_unblocks_streaming_handles(cfg, sync_engine):
+    """If run() raises (here: a request failing validation), unfinished
+    handles finish as aborted instead of hanging their consumers."""
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=16,
+                                  params=sync_engine.params)
+    h = cb.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=2)
+    bad = GenerationRequest(np.arange(1, 9, dtype=np.int32),
+                            max_new_tokens=20)        # overlong for rows
+    with pytest.raises(ValueError, match="positions"):
+        cb.run([bad])
+    assert h.finished
+    assert h.result(timeout=1.0).finish_reason == "aborted"
+    assert list(h) == []                              # iterator terminates
+
+
+def test_abort_queued_request_and_unknown_id(cfg, sync_engine):
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                  params=sync_engine.params)
+    hq = cb.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=3,
+                   arrival_s=30.0)              # never arrives in-test
+    ha = cb.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=3)
+    assert cb.abort(hq.req_id)
+    assert not cb.abort(999999)                 # unknown
+    out = cb.run()
+    assert out[hq.req_id].finish_reason == "aborted"
+    assert out[hq.req_id].n_tokens == 0
+    assert out[ha.req_id].finish_reason == "length"
+    assert not cb.abort(ha.req_id)              # already finished
+
+
+# -------------------------------------------------- lane-aligned pool
+
+def test_lane_aligned_pool_byte_identical(cfg, sync_engine):
+    """Pool allocated with head_dim padded to the TPU lane width: greedy
+    tokens stay byte-identical on both backends (writers zero-pad the
+    per-token KV; readers slice the real head_dim back out)."""
+    prompts = _prompts(cfg, B=4, S=12)
+    want = sync_engine.generate(jnp.asarray(prompts),
+                                max_new_tokens=5).tokens
+    for backend in ("host", "accel"):
+        eng = ContinuousBatchingEngine(
+            cfg, max_slots=4, max_seq=64, params=sync_engine.params,
+            paged=True, block_size=16, lane_align=True, backend=backend,
+            fn_prefix=f"la_{backend}")
+        assert eng.cache["k"].shape[-1] == 128   # hd 32 -> one lane tile
+        got = eng.generate(prompts, max_new_tokens=5)
+        np.testing.assert_array_equal(want, got, err_msg=backend)
+
+
+def test_lane_align_default_off_in_interpret_mode(cfg, sync_engine):
+    """CI (interpret mode) keeps the historical unpadded pool layout —
+    no memory blow-up, no behaviour change."""
+    eng = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                   params=sync_engine.params,
+                                   paged=True, block_size=16,
+                                   fn_prefix="noal")
+    assert eng.cache["k"].shape[-1] == cfg.resolved_head_dim
+
+
+# ------------------------------------------------------ deprecation shims
+
+def test_v1_request_and_serve_shims_warn_once(cfg, sync_engine):
+    import repro.serve.engine as engine_mod
+    import repro.serve.scheduler as sched_mod
+    from repro.serve.scheduler import Request
+
+    sched_mod._REQUEST_DEPRECATION_WARNED = False
+    engine_mod._SERVE_DEPRECATION_WARNED = False
+    with pytest.warns(DeprecationWarning, match="GenerationRequest"):
+        req = Request(np.arange(1, 6, dtype=np.int32), 2)
+    assert isinstance(req, GenerationRequest)     # full v2 request
+    assert req.sampling.greedy
+
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                  params=sync_engine.params)
+    with pytest.warns(DeprecationWarning, match="run\\(\\)"):
+        out = cb.serve([req])
+    # old contract intact: bare (n,) int32 arrays keyed by req_id
+    assert isinstance(out[req.req_id], np.ndarray)
+    assert out[req.req_id].shape == (2,)
+
+    # one warning per process: a second use is silent
+    import warnings as warnings_mod
+    with warnings_mod.catch_warnings():
+        warnings_mod.simplefilter("error", DeprecationWarning)
+        req2 = Request(np.arange(1, 6, dtype=np.int32), 1)
+        cb.serve([req2])
