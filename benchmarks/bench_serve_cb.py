@@ -18,11 +18,21 @@ budgets) served three ways on the same model and weights:
     on the Pallas kernels (interpret mode on CPU runners), proving the
     ACCEL build serves real tokens;
   * forced-migration serving — the same stream through an XarTrekRuntime
-    under a forced HOST -> ACCEL -> HOST schedule flipped mid-stream, so
-    the artifact records per-target call counts, per-backend decode step
-    times (the asymmetry Algorithm 2 can exploit) and the migration
-    count.  ``--json`` embeds ``XarTrekRuntime.summary()`` so CI can see
-    which backend actually served tokens;
+    under a scripted ``FlipSchedule`` SchedulingPolicy (HOST -> ACCEL ->
+    HOST at fixed decode-decision counts), so the artifact records
+    per-target call counts, per-backend decode step times (the asymmetry
+    the scheduling policy can exploit) and the migration count.
+    ``--json`` embeds ``XarTrekRuntime.summary()`` so CI can see which
+    backend actually served tokens;
+  * cluster serving (``--cluster N``, default 2; 0 skips) — N engine
+    workers behind ONE central scheduler (TCP transport) sharing the
+    Algorithm-2 policy over AGGREGATE cross-engine LoadSignals: a
+    low-load trickle decodes on HOST, then a burst drives the aggregate
+    queue depth over the decode threshold and decode steps migrate to
+    ACCEL — real co-tenant load balancing, per-engine tok/s and the
+    aggregate migration count land in the JSON artifact
+    (``floor.json`` bounds ``cluster_tok_s`` and
+    ``cluster_migrations`` from below);
   * sampled-decode serving — the same stream with per-request
     SamplingParams (temperature 0.8, top-k 40, per-request seeds)
     through the in-graph sampler, reporting tok/s plus per-request
@@ -54,9 +64,11 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import ARCHS, reduced
 from repro.core.function import FunctionRegistry
+from repro.core.policy import Decision, PinAccel
 from repro.core.runtime import XarTrekRuntime
-from repro.serve import (ContinuousBatchingEngine, GenerationRequest,
-                         SamplingParams, ServeEngine)
+from repro.core.targets import TargetKind
+from repro.serve import (ClusterFrontEnd, ContinuousBatchingEngine,
+                         GenerationRequest, SamplingParams, ServeEngine)
 from repro.serve.scheduler import RequestQueue, poisson_arrivals
 
 MAX_SLOTS = 4
@@ -64,10 +76,32 @@ MAX_SEQ = 96
 PAD_TO = 32            # static batching pads every prompt to this width
 BLOCK_SIZE = 32        # paged engine's KV block width
 SEED = 0
-# forced-migration schedule: decode-step counts at which the scheduler
-# policy flips HOST -> ACCEL and back (well inside even the CI smoke
-# stream, whose longest request decodes ~15+ steps)
+# forced-migration schedule: decode-decision counts at which the
+# scripted policy flips HOST -> ACCEL and back (well inside even the CI
+# smoke stream, whose longest request decodes ~15+ steps)
 MIGRATE_AT = (4, 10)
+
+
+class FlipSchedule:
+    """Scripted SchedulingPolicy: decode decisions 1..at[0] on HOST,
+    (at[0], at[1]] on ACCEL, HOST after — the forced
+    HOST -> ACCEL -> HOST mid-stream schedule expressed through the
+    policy protocol instead of the deprecated ``on_step`` hook.
+    Prefills stay on HOST so the flip isolates the decode asymmetry."""
+
+    name = "flip_schedule"
+
+    def __init__(self, at=MIGRATE_AT):
+        self.at = at
+        self.decodes = 0
+
+    def decide(self, signals, row, residency):
+        if not row.app.endswith("_decode"):
+            return Decision(TargetKind.HOST)
+        self.decodes += 1
+        if self.at[0] < self.decodes <= self.at[1] and residency.resident:
+            return Decision(TargetKind.ACCEL)
+        return Decision(TargetKind.HOST)
 
 
 def make_requests(vocab: int, n: int, rate: float, seed: int = SEED,
@@ -100,7 +134,7 @@ def serve_static(engine: ServeEngine,
     t0 = time.perf_counter()
     while done < len(reqs):
         now = time.perf_counter() - t0
-        batch: list[Request] = []
+        batch: list[GenerationRequest] = []
         while len(batch) < MAX_SLOTS:
             r = queue.pop_arrived(now)
             if r is None:
@@ -111,8 +145,8 @@ def serve_static(engine: ServeEngine,
             time.sleep(max(min(nxt - now, 0.05), 0.001))
             continue
         toks = np.zeros((MAX_SLOTS, PAD_TO), np.int32)
-        for i, r in enumerate(batch):
-            toks[i, PAD_TO - r.prompt_len:] = r.prompt        # left pad
+        for i, req in enumerate(batch):
+            toks[i, PAD_TO - req.prompt_len:] = req.prompt    # left pad
         engine.generate(toks, max_new_tokens=max(r.max_new_tokens
                                                  for r in batch))
         done += len(batch)
@@ -163,6 +197,10 @@ def main(argv=None) -> int:
                     help="skip the paged-engine run")
     ap.add_argument("--no-accel", action="store_true",
                     help="skip the ACCEL-backend and forced-migration runs")
+    ap.add_argument("--cluster", type=int, default=2, metavar="N",
+                    help="run N engine workers behind one TCP scheduler "
+                         "(0 skips; --no-accel also skips it — the "
+                         "cluster migrates steps to the Pallas build)")
     ap.add_argument("--json", metavar="PATH",
                     help="write results as JSON (CI artifact)")
     ap.add_argument("--check-floor", metavar="PATH",
@@ -236,15 +274,16 @@ def main(argv=None) -> int:
             cfg, max_slots=2 * MAX_SLOTS, max_seq=MAX_SEQ,
             params=sync.params, paged=True, block_size=BLOCK_SIZE,
             num_blocks=MAX_SLOTS * MAX_SEQ // BLOCK_SIZE, fn_prefix="acb",
-            backend="accel")
+            policy=PinAccel())
         warm(accel, cfg.vocab_size)
         t_accel, _ = serve_continuous(accel,
                                       [dataclasses.replace(r) for r in reqs])
         results["accel_cb_tok_s"] = tokens / t_accel
 
-        # forced HOST -> ACCEL -> HOST schedule through the runtime,
-        # flipped mid-stream while slots are live: Algorithm 2's target
-        # choice becomes a real kernel swap
+        # forced HOST -> ACCEL -> HOST schedule through the runtime via
+        # the scripted FlipSchedule policy, flipped mid-stream while
+        # slots are live: the policy's target choice is a real kernel
+        # swap
         rt = XarTrekRuntime(registry=FunctionRegistry(),
                             policy="always_host")
         mig = ContinuousBatchingEngine(
@@ -254,15 +293,7 @@ def main(argv=None) -> int:
             runtime=rt)
         warm(mig, cfg.vocab_size)
         rt.call_log.clear()                   # timed region only
-
-        def flip(engine):
-            s = engine.stats["decode_steps"]
-            if s == MIGRATE_AT[0]:
-                rt.server.policy = "always_accel"
-            elif s == MIGRATE_AT[1]:
-                rt.server.policy = "always_host"
-
-        mig.on_step = flip
+        rt.server.policy = FlipSchedule()     # warm steps don't count
         t_mig, _ = serve_continuous(mig, [dataclasses.replace(r)
                                           for r in reqs])
         summary = rt.summary()
@@ -283,6 +314,59 @@ def main(argv=None) -> int:
             "mig_accel_decode_ms": float(np.mean(step_ms["accel"]))
             if step_ms["accel"] else None,
             "runtime_summary": summary,
+        })
+
+    # N engines, one TCP scheduler, shared Algorithm-2 policy over
+    # aggregate signals: a low-load trickle decodes on HOST, the burst's
+    # queue pressure crosses the decode threshold, steps migrate to
+    # ACCEL — the ROADMAP's co-tenant balancing, measured
+    t_cluster = None
+    if args.cluster and not args.no_accel:
+        fe = ClusterFrontEnd(cfg, n_engines=args.cluster, policy="xartrek",
+                             transport="tcp", params=sync.params,
+                             max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
+                             worker_prefix="cw")
+        fe.set_decode_thresholds(fpga_thr=3.0)
+        crng = np.random.RandomState(args.seed)
+
+        def short_req(n_new):
+            # prompts fit the warmed 8-wide bucket: no mid-scenario
+            # shape-bucket compile can eat the pressure window
+            return GenerationRequest(
+                crng.randint(0, cfg.vocab_size,
+                             size=int(crng.randint(4, 9))),
+                max_new_tokens=n_new)
+
+        with fe:
+            fe.warmup()
+            t0 = time.perf_counter()
+            trickle = [fe.submit(short_req(40))]      # low load -> HOST
+            time.sleep(0.02)
+            burst = [fe.submit(short_req(8))          # pressure -> ACCEL
+                     for _ in range(max(args.n_requests,
+                                        4 * args.cluster))]
+            outs = fe.drain()
+            t_cluster = time.perf_counter() - t0
+            csummary = fe.summary()
+        assert len(outs) == len(trickle) + len(burst)
+        ctokens = sum(o.n_tokens for o in outs.values())
+        per_engine = {}
+        for w in fe.workers:
+            wtok = sum(o.n_tokens for rid, o in outs.items()
+                       if fe.last_owners.get(rid) == w.worker_id)
+            decode = (csummary["per_engine"][w.worker_id]["per_function"]
+                      .get(f"{w.worker_id}_decode", {}))
+            per_engine[w.worker_id] = {
+                "tok_s": wtok / t_cluster,
+                "decode_calls": decode.get("calls", {}),
+                "migrations": decode.get("migrations", 0),
+            }
+        results.update({
+            "cluster_n": args.cluster,
+            "cluster_tok_s": ctokens / t_cluster,
+            "cluster_migrations": csummary["migrations"],
+            "cluster_decisions": csummary["decisions"],
+            "cluster_per_engine": per_engine,
         })
 
     util = cb.stats["decode_row_util"] / max(cb.stats["decode_steps"], 1)
@@ -314,6 +398,13 @@ def main(argv=None) -> int:
              f"accel={results['mig_accel_decode_calls']}x"
              f"{'' if ad_ms is None else f'{ad_ms:.1f}ms'} "
              f"migrations={results['mig_migrations']}")
+    if t_cluster is not None:
+        per_eng = " ".join(
+            f"{wid}={pe['tok_s']:.1f}tok/s(mig={pe['migrations']})"
+            for wid, pe in results["cluster_per_engine"].items())
+        emit("serve_cb/cluster", t_cluster * 1e6 / max(ctokens, 1),
+             f"{results['cluster_tok_s']:.1f}tok/s n={args.cluster} "
+             f"migrations={results['cluster_migrations']} {per_eng}")
 
     if args.json:
         with open(args.json, "w") as f:

@@ -20,10 +20,13 @@ live token stream via its ``RequestHandle``.
 
     PYTHONPATH=src python examples/migration_serve.py [--backend auto]
 
-``--backend`` pins the schedule instead of letting Algorithm 2 decide:
-``host`` serves everything on the XLA build, ``accel`` everything on
-the Pallas build, ``auto`` (default) reproduces the load-driven
-migration above.
+Placement is a pluggable ``SchedulingPolicy`` (core/policy):
+``--backend`` picks one — ``host``/``accel`` are the ``PinHost`` /
+``PinAccel`` static policies, ``auto`` (default) is ``XarTrekHeuristic``
+(Algorithm 2) fed by REAL engine telemetry: the engine publishes a
+``LoadSignals`` snapshot (queue depth, free KV, per-target decode ms)
+every loop iteration, and the synthetic co-tenant counter is merged in
+as one more signal source.
 """
 import argparse
 import threading
@@ -33,6 +36,7 @@ import numpy as np
 
 from repro.configs import ARCHS, reduced
 from repro.core.function import FunctionRegistry
+from repro.core.policy import PinAccel, PinHost, XarTrekHeuristic
 from repro.core.runtime import XarTrekRuntime
 from repro.core.targets import TargetKind
 from repro.serve import (ContinuousBatchingEngine, GenerationRequest,
@@ -61,20 +65,21 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = reduced(ARCHS["smollm-135m"])
-    policy = {"host": "always_host", "accel": "always_accel",
-              "auto": "xartrek"}[args.backend]
-    rt = XarTrekRuntime(registry=FunctionRegistry(), policy=policy,
+    policy = {"host": PinHost(), "accel": PinAccel(),
+              "auto": XarTrekHeuristic()}[args.backend]
+    rt = XarTrekRuntime(registry=FunctionRegistry(),
                         min_reconfig_seconds=1.0 if args.backend == "auto"
                         else 0.0)
     # auto keeps the paper's asynchronous FPGA pre-configuration (the
     # latency-hiding demo below); only accel-pinned runs compile the
     # ACCEL build eagerly (host-pinned never calls it — don't stall on it)
     engine = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=96,
-                                      runtime=rt, seed=0,
+                                      runtime=rt, seed=0, policy=policy,
                                       eager_accel=args.backend == "accel")
-    # threshold row for the decode step: ACCEL profitable under load
+    # threshold row for the decode step: ACCEL profitable once the real
+    # load (queued requests + synthetic co-tenants) crosses ~6
     row = rt.table.row("cb_decode")
-    row.fpga_thr, row.arm_thr = 2.5, 1e9
+    row.fpga_thr, row.arm_thr = 6.0, 1e9
 
     # --- streaming demo: consume one request token-by-token while the
     # engine loop drains in another thread

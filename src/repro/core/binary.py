@@ -17,6 +17,7 @@ import jax
 
 from repro.parallel.compat import use_mesh
 from repro.core.function import MigratableFunction
+from repro.core.policy import ewma
 from repro.core.targets import TargetKind
 
 
@@ -144,6 +145,17 @@ class MultiTargetBinary:
             lru.popitem(last=False)
             self.shape_stats["evictions"] += 1
         return cv
+
+    def note_exec(self, kind: TargetKind, ms: float) -> None:
+        """Record one executed call's wall time against the target's
+        stats: ``recent_exec_ms`` is an EWMA of the step time — the
+        per-target speed signal ``LoadSignals`` carries to scheduling
+        policies (a LatencyAwarePolicy compares HOST vs ACCEL step cost
+        from here, not from a synthetic profile)."""
+        cs = self.compile_stats.setdefault(
+            kind, {"compiles": 0, "compile_seconds": 0.0})
+        cs["calls"] = cs.get("calls", 0) + 1
+        cs["recent_exec_ms"] = ewma(cs.get("recent_exec_ms"), ms)
 
     def compile_all(self, *example_specs) -> None:
         for kind in self.fn.targets():

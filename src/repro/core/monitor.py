@@ -1,4 +1,10 @@
-"""Load monitor: the paper's "x86 CPU load" (#processes) + Table-3 bands."""
+"""Load monitor: the paper's "x86 CPU load" (#processes) + Table-3 bands.
+
+The monitor is one SOURCE of scheduling signals, not the policy input
+itself any more: ``signals()`` packages the per-target process counts
+and the Table-3 band as a ``LoadSignals`` that the scheduler server
+merges with engine-published serve telemetry (see ``core.policy``).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -40,3 +46,17 @@ class LoadMonitor:
         if total_processes <= total:
             return "medium"
         return "high"
+
+    def signals(self) -> "LoadSignals":
+        """The monitor's contribution to the policy input: per-target
+        process counts plus the Table-3 band over the TOTAL processes in
+        flight (the banding used to be dead code on the serve path —
+        now every published LoadSignals carries it)."""
+        from repro.core.policy import LoadSignals
+        with self._lock:
+            host = float(self._active[TargetKind.HOST])
+            aux = float(self._active[TargetKind.AUX])
+            accel = float(self._active[TargetKind.ACCEL])
+        return LoadSignals(
+            x86_load=host, aux_load=aux, accel_load=accel,
+            band=self.band(int(host + aux + accel)))

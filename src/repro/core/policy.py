@@ -1,14 +1,46 @@
-"""Algorithm 2 — Xar-Trek's scheduling policy, faithful port.
+"""Scheduling policies: the pluggable placement surface of the run-time.
 
-Inputs: current x86 load, the app's threshold row, and whether the app's
-hardware kernel is resident on the accelerator.  Output: the migration
-flag (HOST/AUX/ACCEL) plus whether to kick an asynchronous accelerator
-reconfiguration (the latency-hiding trick of §3.4: while the kernel is
-being loaded, execution continues on a CPU target).
+The paper's run-time splits *mechanism* (compiled multi-target variants,
+the kernel bank, migration) from *decision* (Algorithm 2).  This module
+is the decision side, redesigned as a first-class protocol so the
+decision can be swapped without touching the mechanism:
+
+  ``SchedulingPolicy.decide(signals, row, residency) -> Decision``
+
+* ``LoadSignals`` is everything a placement decision may consult — the
+  paper's synthetic x86 process count PLUS real serve-engine telemetry
+  (queue depth, free KV-block fraction, per-target recent decode
+  milliseconds, TTFT/TPOT percentiles).  Engines publish one per step;
+  the scheduler server aggregates across engines, so one engine's load
+  pressure is visible to every co-tenant's decision.
+* ``ThresholdRow`` is the compiler's Table-2 artifact for the function
+  being placed (Algorithm 1 keeps refining it).
+* ``Residency`` is the accelerator state for that function's hardware
+  kernel (bank-resident / reconfiguration in flight).
+
+Built-ins:
+
+* ``XarTrekHeuristic`` — Algorithm 2, numerics unchanged (it delegates
+  to the legacy ``schedule`` free function, which remains the
+  line-annotated faithful port).
+* ``PinHost`` / ``PinAux`` / ``PinAccel`` — the static placements that
+  used to be the scheduler's ``"always_*"`` strings and the serve
+  engine's ``backend="host"/"accel"`` special cases.
+* ``LatencyAwarePolicy`` — decides from serve-level signals instead of
+  the process counter: offloads decode to ACCEL under queue/KV/TTFT
+  pressure (kicking an async reconfiguration first when the kernel is
+  cold — the paper's §3.4 latency-hiding), returns to HOST when the
+  pressure drains.
+
+Policies move *placement only*: every target serves the same math (the
+sampling transform is traced identically into each build), so outputs
+are byte-identical across policies — the serve analogue of "migration
+is transparent to the application".
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Protocol, Union, runtime_checkable
 
 from repro.core.targets import TargetKind
 from repro.core.thresholds import ThresholdRow
@@ -24,9 +56,104 @@ class Decision:
         return self.target.flag
 
 
+@dataclasses.dataclass(frozen=True)
+class Residency:
+    """Accelerator state of the function's hardware kernel."""
+
+    resident: bool = False         # bank-resident, callable right now
+    loading: bool = False          # async reconfiguration in flight
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadSignals:
+    """One policy input: real engine telemetry + the paper's load counter.
+
+    ``x86_load`` is Algorithm 2's signal — processes on (or queued for)
+    the host.  The serve-level fields come from the engines themselves
+    (``ContinuousBatchingEngine.signals()``); ``None`` means "no
+    observation yet" so policies can distinguish cold-start from zero.
+    ``engines`` counts how many engines contributed (1 for a lone
+    engine; N after ``LoadSignals.aggregate``).
+    """
+
+    x86_load: float = 0.0              # host processes (Algorithm 2's input)
+    aux_load: float = 0.0
+    accel_load: float = 0.0
+    band: str = "low"                  # Table-3 low/medium/high band
+    queue_depth: int = 0               # requests arrived but not admitted
+    active_slots: int = 0              # in-flight decode rows
+    free_kv_frac: float = 1.0          # free fraction of KV capacity
+    host_decode_ms: Optional[float] = None   # recent decode step ms / target
+    accel_decode_ms: Optional[float] = None
+    ttft_p50_s: Optional[float] = None
+    tpot_p50_s: Optional[float] = None
+    engines: int = 1
+
+    @staticmethod
+    def aggregate(signals: list["LoadSignals"]) -> "LoadSignals":
+        """Cross-engine aggregate: pressure sums (queue depth, active
+        slots, loads), capacity takes the worst engine (min free KV),
+        latency observations average over the engines that have any.
+        This is the scheduler server's cluster-wide view — one engine's
+        pressure raises the aggregate every co-tenant's decision sees."""
+        if not signals:
+            return LoadSignals(engines=0)
+
+        def mean(vals):
+            vals = [v for v in vals if v is not None]
+            return sum(vals) / len(vals) if vals else None
+
+        bands = [s.band for s in signals]
+        band = ("high" if "high" in bands
+                else "medium" if "medium" in bands else "low")
+        return LoadSignals(
+            x86_load=sum(s.x86_load for s in signals),
+            aux_load=sum(s.aux_load for s in signals),
+            accel_load=sum(s.accel_load for s in signals),
+            band=band,
+            queue_depth=sum(s.queue_depth for s in signals),
+            active_slots=sum(s.active_slots for s in signals),
+            free_kv_frac=min(s.free_kv_frac for s in signals),
+            host_decode_ms=mean([s.host_decode_ms for s in signals]),
+            accel_decode_ms=mean([s.accel_decode_ms for s in signals]),
+            ttft_p50_s=mean([s.ttft_p50_s for s in signals]),
+            tpot_p50_s=mean([s.tpot_p50_s for s in signals]),
+            engines=sum(s.engines for s in signals),
+        )
+
+
+def ewma(prev: Optional[float], value: float,
+         alpha: float = 0.2) -> float:
+    """The telemetry smoother every decode-ms signal source shares
+    (binary.note_exec for runtime-dispatched steps, the engine's direct
+    path): first observation seeds, later ones blend at ``alpha``."""
+    return value if prev is None else (1.0 - alpha) * prev + alpha * value
+
+
+# --------------------------------------------------------------- protocol
+
+@runtime_checkable
+class SchedulingPolicy(Protocol):
+    """One placement decision per instrumented call.
+
+    ``decide`` must be pure in the signals/row/residency inputs up to
+    the policy's own internal state (a scripted policy may keep a step
+    counter) and must never block: it runs under the scheduler server's
+    lock on every client request.
+    """
+
+    name: str
+
+    def decide(self, signals: LoadSignals, row: ThresholdRow,
+               residency: Residency) -> Decision:
+        ...
+
+
 def schedule(cpu_load: float, row: ThresholdRow,
              kernel_resident: bool) -> Decision:
-    """One Algorithm-2 evaluation (lines annotated)."""
+    """One Algorithm-2 evaluation (lines annotated) — the paper's
+    heuristic, kept as a free function so its numerics stay auditable
+    against the paper; ``XarTrekHeuristic`` is its protocol wrapper."""
     arm_thr, fpga_thr = row.arm_thr, row.fpga_thr
 
     if (cpu_load <= arm_thr) and (cpu_load > fpga_thr) and not kernel_resident:
@@ -49,3 +176,119 @@ def schedule(cpu_load: float, row: ThresholdRow,
     # unreachable given the four exhaustive load/residency cases above,
     # but the paper's default is "continue on x86"
     return Decision(TargetKind.HOST)
+
+
+# --------------------------------------------------------------- built-ins
+
+class XarTrekHeuristic:
+    """Algorithm 2 behind the protocol — numerics identical to
+    ``schedule`` (regression-tested branch by branch)."""
+
+    name = "xartrek"
+
+    def decide(self, signals: LoadSignals, row: ThresholdRow,
+               residency: Residency) -> Decision:
+        return schedule(signals.x86_load, row, residency.resident)
+
+
+class _Pin:
+    """Static placement; absorbs the old ``"always_*"`` policy strings
+    and the serve engine's ``backend="host"/"accel"`` escape hatches."""
+
+    target: TargetKind
+
+    def decide(self, signals: LoadSignals, row: ThresholdRow,
+               residency: Residency) -> Decision:
+        reconf = (self.target == TargetKind.ACCEL
+                  and not residency.resident and not residency.loading)
+        return Decision(self.target, reconfigure=reconf)
+
+
+class PinHost(_Pin):
+    name = "always_host"
+    target = TargetKind.HOST
+
+
+class PinAux(_Pin):
+    name = "always_aux"
+    target = TargetKind.AUX
+
+
+class PinAccel(_Pin):
+    """Pin to ACCEL.  While the kernel is still cold the decision keeps
+    requesting an async reconfiguration; the runtime's mechanism layer
+    falls back to HOST for the calls in between (latency hiding), so
+    pinning never blocks on a compile."""
+
+    name = "always_accel"
+    target = TargetKind.ACCEL
+
+
+@dataclasses.dataclass
+class LatencyAwarePolicy:
+    """Serve-signal-driven placement (no synthetic process counter).
+
+    Pressure is any of: queue depth at/above ``queue_depth_hi``, free KV
+    capacity at/below ``free_kv_lo``, or TTFT p50 above ``ttft_slo_s``.
+    Under pressure the decode offloads to ACCEL — freeing the contended
+    host for co-tenants, exactly Algorithm 2's rationale — kicking an
+    async reconfiguration first if the kernel is cold.  Without
+    pressure it serves on HOST, unless the measured ACCEL step time is
+    strictly faster than HOST's (then ACCEL is simply the better
+    device and there is no reason to come back).
+    """
+
+    queue_depth_hi: int = 4
+    free_kv_lo: float = 0.125
+    ttft_slo_s: Optional[float] = None
+    name: str = "latency_aware"
+
+    def pressured(self, s: LoadSignals) -> bool:
+        return (s.queue_depth >= self.queue_depth_hi
+                or s.free_kv_frac <= self.free_kv_lo
+                or (self.ttft_slo_s is not None
+                    and s.ttft_p50_s is not None
+                    and s.ttft_p50_s > self.ttft_slo_s))
+
+    def decide(self, signals: LoadSignals, row: ThresholdRow,
+               residency: Residency) -> Decision:
+        accel_strictly_faster = (
+            signals.accel_decode_ms is not None
+            and signals.host_decode_ms is not None
+            and signals.accel_decode_ms < signals.host_decode_ms)
+        want_accel = self.pressured(signals) or accel_strictly_faster
+        if not want_accel:
+            return Decision(TargetKind.HOST)
+        if residency.resident:
+            return Decision(TargetKind.ACCEL)
+        # cold kernel: stay on HOST while the bank loads (§3.4)
+        return Decision(TargetKind.HOST, reconfigure=not residency.loading)
+
+
+# legacy policy strings -> protocol instances (the scheduler server and
+# the simulator accept either form)
+POLICY_ALIASES = {
+    "xartrek": XarTrekHeuristic,
+    "always_host": PinHost,
+    "always_aux": PinAux,
+    "always_accel": PinAccel,
+    "latency_aware": LatencyAwarePolicy,
+}
+
+PolicyLike = Union[str, SchedulingPolicy]
+
+
+def resolve_policy(policy: PolicyLike) -> SchedulingPolicy:
+    """Accepts a SchedulingPolicy instance or a legacy string alias."""
+    if isinstance(policy, str):
+        try:
+            return POLICY_ALIASES[policy]()
+        except KeyError:
+            raise ValueError(
+                f"unknown policy {policy!r}; expected one of "
+                f"{sorted(POLICY_ALIASES)} or a SchedulingPolicy") from None
+    if isinstance(policy, type):           # a policy CLASS: instantiate
+        policy = policy()
+    if callable(getattr(policy, "decide", None)):
+        return policy
+    raise TypeError(f"not a SchedulingPolicy: {policy!r}")

@@ -22,7 +22,10 @@ from repro.core.function import GLOBAL_REGISTRY, FunctionRegistry
 from repro.core.kernel_bank import KernelBank
 from repro.core.migration import migrate
 from repro.core.monitor import LoadMonitor
-from repro.core.scheduler import SchedulerClient, SchedulerServer
+from repro.core.policy import LoadSignals, PolicyLike
+from repro.core.scheduler import (
+    SchedulerClient, SchedulerServer, TcpSchedulerClient,
+)
 from repro.core.targets import Platform, TargetKind, TPU_PLATFORM
 from repro.core.thresholds import ThresholdTable
 
@@ -32,23 +35,46 @@ class XarTrekRuntime:
                  mesh: Optional[jax.sharding.Mesh] = None,
                  registry: FunctionRegistry = GLOBAL_REGISTRY,
                  table: Optional[ThresholdTable] = None,
-                 policy: str = "xartrek",
+                 policy: Optional[PolicyLike] = None,
                  bank_slots: Optional[int] = None,
-                 min_reconfig_seconds: float = 0.0):
+                 min_reconfig_seconds: float = 0.0,
+                 server: Optional[SchedulerServer] = None,
+                 scheduler_address: Optional[tuple] = None):
+        """``policy`` is a ``SchedulingPolicy`` instance or a legacy
+        alias string.  ``server`` shares an EXTERNAL scheduler (the
+        cluster case: N runtimes, one central policy over aggregate
+        signals) — the runtime then registers its kernels/bank there and
+        adopts the server's table and monitor.  ``scheduler_address``
+        additionally routes client traffic (request/report/publish) over
+        the paper-faithful TCP transport instead of in-process calls."""
         self.platform = platform
         self.mesh = mesh
         self.registry = registry
-        self.table = table or ThresholdTable()
         self.binaries: dict[str, MultiTargetBinary] = {}
         self._specs: dict[str, tuple] = {}
         self.bank = KernelBank(
             slots=bank_slots or platform.accel_slots,
             load_fn=self._load_accel,
             min_load_seconds=min_reconfig_seconds)
-        self.monitor = LoadMonitor(platform)
-        self.server = SchedulerServer(platform, self.table, self.bank,
-                                      self.monitor, policy=policy)
-        self._clients: dict[str, SchedulerClient] = {}
+        if server is not None:
+            # the central scheduler owns policy and table; a caller who
+            # passes either alongside server= would silently get the
+            # server's — refuse the ambiguous combination instead
+            if policy is not None or table is not None:
+                raise ValueError(
+                    "policy=/table= conflict with server=: the shared "
+                    "scheduler already owns both (set them there)")
+            self.server = server
+            self.table = server.table
+            self.monitor = server.monitor
+        else:
+            self.table = table or ThresholdTable()
+            self.monitor = LoadMonitor(platform)
+            self.server = SchedulerServer(platform, self.table, self.bank,
+                                          self.monitor,
+                                          policy=policy or "xartrek")
+        self._scheduler_address = scheduler_address
+        self._clients: dict[str, object] = {}
         self.call_log: list[dict] = []
 
     # ----------------------------------------------------------- prepare
@@ -79,6 +105,10 @@ class XarTrekRuntime:
             for k, v in table_row.items():
                 setattr(row, k, v)
         if TargetKind.ACCEL in fn.variants:
+            # bind this kernel to THIS runtime's bank on the scheduler
+            # (shared-server clusters: residency and reconfiguration
+            # must reach the worker that owns the compiled variants)
+            self.server.register_kernel(fn_name, self.bank)
             if eager_accel:
                 self.bank.load_sync(fn_name)
             else:
@@ -92,10 +122,23 @@ class XarTrekRuntime:
         return binary.compile(TargetKind.ACCEL, *specs)
 
     # -------------------------------------------------------------- call
-    def _client(self, app: str) -> SchedulerClient:
+    def _client(self, app: str):
         if app not in self._clients:
-            self._clients[app] = SchedulerClient(app, self.server)
+            if self._scheduler_address is not None:
+                self._clients[app] = TcpSchedulerClient(
+                    app, self._scheduler_address)
+            else:
+                self._clients[app] = SchedulerClient(app, self.server)
         return self._clients[app]
+
+    def publish_signals(self, engine_id: str, signals: LoadSignals) -> None:
+        """Feed one engine's serve telemetry to the scheduler (TCP when
+        a scheduler_address was given, in-process otherwise); the policy
+        sees it merged into the aggregate on the next decision."""
+        if self._scheduler_address is not None:
+            self._client("_signals").publish(engine_id, signals)
+        else:
+            self.server.publish(engine_id, signals)
 
     def call(self, fn_name: str, *args,
              state_shardings: Optional[dict] = None) -> Any:
@@ -131,6 +174,7 @@ class XarTrekRuntime:
         finally:
             self.monitor.job_finished(kind)
         dt = time.perf_counter() - t0
+        binary.note_exec(kind, dt * 1e3)
         client.after_call(kind, dt * 1e3)
         self.call_log.append({"fn": fn_name, "target": kind.value,
                               "ms": dt * 1e3,

@@ -1,14 +1,25 @@
 """Run-time scheduler: client/server split, as in the paper (§3.2).
 
-The server owns the policy (Algorithm 2), the threshold table
-(Algorithm 1 updates arrive via client reports), the kernel bank and
+The server owns the policy (a pluggable ``SchedulingPolicy`` — the
+default is Algorithm 2 as ``XarTrekHeuristic``), the threshold table
+(Algorithm 1 updates arrive via client reports), the kernel bank(s) and
 the load monitor.  A client instance is bound to each application/job;
 it queries the server *before* the selected function's call (receiving
 the migration flag) and reports *after* it returns.
 
+Signals: the policy input is no longer just the monitor's synthetic
+process counter.  Serve engines ``publish`` a ``LoadSignals`` snapshot
+each step (queue depth, free KV fraction, per-target decode ms, latency
+percentiles); the server aggregates the published snapshots across
+engines and merges them with the monitor's process counts — so in a
+multi-engine cluster one engine's pressure raises the load every
+co-tenant's decision sees (the ROADMAP's "Algorithm 2 balances across
+real co-tenant load").
+
 Two transports: in-process (default — one JAX process drives the fleet)
 and a line-JSON TCP transport mirroring the paper's socket setup (used
-by the multi-process example and tests).
+by the cluster front-end, the multi-process example and tests); the TCP
+protocol carries ``request`` / ``report`` / ``publish`` ops.
 """
 from __future__ import annotations
 
@@ -21,43 +32,100 @@ from typing import Optional
 
 from repro.core.kernel_bank import KernelBank
 from repro.core.monitor import LoadMonitor
-from repro.core.policy import Decision, schedule
+from repro.core.policy import (
+    Decision, LoadSignals, PolicyLike, Residency, resolve_policy,
+)
 from repro.core.targets import Platform, TargetKind
 from repro.core.thresholds import ThresholdTable
 
 
 class SchedulerServer:
     def __init__(self, platform: Platform, table: ThresholdTable,
-                 bank: KernelBank,
+                 bank: Optional[KernelBank] = None,
                  monitor: Optional[LoadMonitor] = None,
-                 policy: str = "xartrek"):
+                 policy: PolicyLike = "xartrek"):
         self.platform = platform
         self.table = table
-        self.bank = bank
+        self.bank = bank               # default bank (single-runtime case)
         self.monitor = monitor or LoadMonitor(platform)
-        self.policy = policy     # xartrek | always_host | always_aux | always_accel
+        self._policy = resolve_policy(policy)
         self._lock = threading.Lock()
         self.decisions = {k: 0 for k in TargetKind}
         self.reconfigs = 0
+        # kernel -> owning bank: in a cluster every runtime registers its
+        # functions here so residency/reconfiguration reach the right bank
+        self._owners: dict[str, KernelBank] = {}
+        # engine_id -> latest published serve telemetry
+        self._published: dict[str, LoadSignals] = {}
+
+    # ------------------------------------------------------------- policy
+    @property
+    def policy(self) -> object:
+        return self._policy
+
+    @policy.setter
+    def policy(self, value: PolicyLike) -> None:
+        """Accepts a SchedulingPolicy instance or a legacy alias string
+        ("xartrek" | "always_host" | "always_aux" | "always_accel" |
+        "latency_aware") — callers flip it mid-stream in benchmarks."""
+        self._policy = resolve_policy(value)
+
+    # ------------------------------------------------------------ signals
+    def publish(self, engine_id: str, signals: LoadSignals) -> None:
+        """Engine-side telemetry feed: the latest snapshot per engine
+        (no history — the policy wants current pressure, not a log)."""
+        with self._lock:
+            self._published[engine_id] = signals
+
+    def signals(self) -> LoadSignals:
+        """The policy input: the monitor's process counts merged with
+        the cross-engine aggregate of published serve telemetry.
+        Queued-but-unadmitted requests count into ``x86_load`` — the
+        paper's load is "processes on or queued for the host", and a
+        request waiting for a slot is queued host work."""
+        base = self.monitor.signals()
+        with self._lock:
+            published = list(self._published.values())
+        if not published:
+            return base
+        agg = LoadSignals.aggregate(published)
+        return dataclasses.replace(
+            agg,
+            x86_load=base.x86_load + agg.queue_depth,
+            aux_load=base.aux_load,
+            accel_load=base.accel_load,
+            band=self.monitor.band(
+                int(base.x86_load + base.aux_load + base.accel_load
+                    + agg.queue_depth)),
+        )
+
+    def register_kernel(self, kernel: str, bank: KernelBank) -> None:
+        """Bind a hardware kernel to the bank that can load it (each
+        cluster worker's runtime owns its own compiled variants)."""
+        with self._lock:
+            self._owners[kernel] = bank
+
+    def residency(self, kernel: str) -> Residency:
+        bank = self._owners.get(kernel, self.bank)
+        if bank is None:
+            return Residency()
+        return Residency(resident=bank.is_resident(kernel),
+                         loading=bank.is_loading(kernel))
 
     # ------------------------------------------------------------- server
     def request(self, app: str) -> Decision:
         """Handle one client scheduling request (Algorithm 2 l.5-8)."""
+        row = self.table.row(app)
+        sig = self.signals()
+        res = self.residency(row.hw_kernel)
         with self._lock:
-            if self.policy == "always_host":
-                d = Decision(TargetKind.HOST)
-            elif self.policy == "always_aux":
-                d = Decision(TargetKind.AUX)
-            elif self.policy == "always_accel":
-                d = Decision(TargetKind.ACCEL)
-            else:
-                row = self.table.row(app)
-                load = self.monitor.x86_load()
-                d = schedule(load, row, self.bank.is_resident(row.hw_kernel))
+            d = self._policy.decide(sig, row, res)
             self.decisions[d.target] += 1
-        if d.reconfigure:
-            self.reconfigs += 1
-            self.bank.load_async(self.table.row(app).hw_kernel)
+            if d.reconfigure:
+                self.reconfigs += 1
+                bank = self._owners.get(row.hw_kernel, self.bank)
+        if d.reconfigure and bank is not None:
+            bank.load_async(row.hw_kernel)      # async; outside the lock
         return d
 
     def report(self, app: str, executed_on: TargetKind, exec_time: float,
@@ -82,6 +150,9 @@ class SchedulerClient:
                    cpu_load: Optional[float] = None) -> None:
         self.server.report(self.app, executed_on, exec_time, cpu_load)
 
+    def publish(self, engine_id: str, signals: LoadSignals) -> None:
+        self.server.publish(engine_id, signals)
+
 
 # --------------------------------------------------------------- TCP mode
 
@@ -97,6 +168,10 @@ class _Handler(socketserver.StreamRequestHandler):
                     self.server.xar.report(
                         msg["app"], TargetKind(msg["target"]),
                         float(msg["exec_time"]), msg.get("cpu_load"))
+                    resp = {"ok": True}
+                elif msg["op"] == "publish":
+                    self.server.xar.publish(
+                        msg["engine"], LoadSignals(**msg["signals"]))
                     resp = {"ok": True}
                 else:
                     resp = {"error": f"unknown op {msg['op']}"}
@@ -133,11 +208,13 @@ class TcpSchedulerClient:
         self.app = app
         self._sock = socket.create_connection(address)
         self._file = self._sock.makefile("rw")
+        self._lock = threading.Lock()    # one in-flight rpc per connection
 
     def _rpc(self, msg: dict) -> dict:
-        self._file.write(json.dumps(msg) + "\n")
-        self._file.flush()
-        return json.loads(self._file.readline())
+        with self._lock:
+            self._file.write(json.dumps(msg) + "\n")
+            self._file.flush()
+            return json.loads(self._file.readline())
 
     def before_call(self) -> Decision:
         resp = self._rpc({"op": "request", "app": self.app})
@@ -150,6 +227,10 @@ class TcpSchedulerClient:
         self._rpc({"op": "report", "app": self.app,
                    "target": executed_on.value, "exec_time": exec_time,
                    "cpu_load": cpu_load})
+
+    def publish(self, engine_id: str, signals: LoadSignals) -> None:
+        self._rpc({"op": "publish", "engine": engine_id,
+                   "signals": dataclasses.asdict(signals)})
 
     def close(self) -> None:
         self._sock.close()

@@ -24,7 +24,9 @@ import heapq
 import math
 from typing import Optional
 
-from repro.core.policy import schedule
+from repro.core.policy import (
+    LoadSignals, PolicyLike, Residency, _Pin, resolve_policy,
+)
 from repro.core.targets import DEFAULT_PLATFORM, Platform, TargetKind
 from repro.core.thresholds import ThresholdTable
 
@@ -95,12 +97,16 @@ class Job:
 class PlatformSim:
     def __init__(self, platform: Platform = DEFAULT_PLATFORM,
                  table: Optional[ThresholdTable] = None,
-                 policy: str = "xartrek",
+                 policy: PolicyLike = "xartrek",
                  reconfig_ms: float = 4000.0,
                  accel_slots: int = 4,
                  preconfigure: tuple[str, ...] = ()):
         self.platform = platform
-        self.policy = policy
+        # the scheduler under test is any SchedulingPolicy (legacy alias
+        # strings resolve to the built-ins); threshold learning
+        # (Algorithm 1) applies unless the placement is statically pinned
+        self.policy = resolve_policy(policy)
+        self._learn_thresholds = not isinstance(self.policy, _Pin)
         self.table = table or ThresholdTable()
         self.reconfig_ms = reconfig_ms
         self.accel_slots = accel_slots
@@ -150,20 +156,25 @@ class PlatformSim:
 
     # --------------------------------------------------------- scheduling
     def _decide(self, job: Job) -> TargetKind:
+        """One policy evaluation through the SchedulingPolicy protocol —
+        the same ``decide(signals, row, residency)`` the JAX-native
+        scheduler server calls, fed from the simulator's state."""
         if job.background:
             return TargetKind.HOST
-        if self.policy == "always_host":
-            return TargetKind.HOST
-        if self.policy == "always_aux":
-            return TargetKind.AUX
-        if self.policy == "always_accel":
-            self._ensure_kernel(job.app.hw_kernel)
-            return TargetKind.ACCEL
         row = self.table.row(job.app.name, job.app.hw_kernel)
-        resident = job.app.hw_kernel in self.resident
-        d = schedule(self.host_load(), row, resident)
+        kernel = job.app.hw_kernel
+        signals = LoadSignals(
+            x86_load=self.host_load(),
+            aux_load=float(len(self.running[TargetKind.AUX])),
+            accel_load=float(len(self.running[TargetKind.ACCEL])),
+        )
+        loading = (self.reconfig_kernel == kernel
+                   and self.now < self.reconfig_until)
+        d = self.policy.decide(signals, row,
+                               Residency(resident=kernel in self.resident,
+                                         loading=loading))
         if d.reconfigure:
-            self._ensure_kernel(job.app.hw_kernel)
+            self._ensure_kernel(kernel)
         return d.target
 
     def _ensure_kernel(self, kernel: str) -> None:
@@ -190,7 +201,7 @@ class PlatformSim:
             self.accel_queue.remove(job)
             self.resident[job.app.hw_kernel] = self.now
         job.calls_done += 1
-        if not job.background and self.policy == "xartrek":
+        if not job.background and self._learn_thresholds:
             # Algorithm 1: report observed time + load after the return
             elapsed = self.now - job.call_start
             self.table.update(job.app.name, kind, elapsed, self.host_load())

@@ -159,14 +159,17 @@ class Model:
         return last, cache
 
     def prefill_at_sampled(self, params, batch, backend: str = "xla"
-                           ) -> tuple[jax.Array, dict]:
+                           ) -> tuple[jax.Array, jax.Array, dict]:
         """``prefill_at`` with in-graph per-request sampling of the first
         generated token.  ``batch`` additionally carries the (B,) sampling
         vectors (see models/sampling.SAMPLING_KEYS); the token's absolute
         position is the prompt length, so its PRNG key —
         ``fold_in(PRNGKey(seed), length)`` — is identical on every
         backend and across preempt/resume re-prefills.  Returns
-        ((B,) int32 tokens, cache)."""
+        ((B,) int32 tokens, (B,) f32 chosen-token logprobs, cache) —
+        the logprob is always computed (cheap: one log_softmax gather)
+        so the compile signature stays static whether or not the
+        request asked for it."""
         from repro.models import sampling as sampling_lib
         fwd = {k: v for k, v in batch.items()
                if k not in sampling_lib.SAMPLING_KEYS}
@@ -174,22 +177,25 @@ class Model:
         if last.ndim != 3:
             raise NotImplementedError(
                 "in-graph sampling supports single-codebook logits only")
-        toks = sampling_lib.sample_tokens(
+        toks, logps = sampling_lib.sample_tokens(
             last[:, -1, :], batch["temperature"], batch["top_k"],
             batch["top_p"], batch["seed"], batch["length"])
-        return toks, cache
+        return toks, logps, cache
 
     def decode_sampled(self, params, cache, batch, backend: str = "xla"
-                       ) -> tuple[jax.Array, dict]:
+                       ) -> tuple[jax.Array, jax.Array, dict]:
         """``decode`` with in-graph per-request sampling fused into the
-        step: the returned value is the (B,) int32 next tokens, not
-        logits, so host code never re-implements the sampling math and
-        both HOST/ACCEL builds trace the identical transform.  The
-        sampled token's absolute position is ``index + 1`` (the fed
-        token's KV lands at ``index``; the new token sits one past it),
-        matching ``prefill_at_sampled``'s position convention.  The
-        sampling vectors are (B,) data leaves — one static compile
-        signature regardless of the request mix (binary.shape_key)."""
+        step: the returned value is the (B,) int32 next tokens (plus
+        their (B,) f32 chosen-token logprobs), not logits, so host code
+        never re-implements the sampling math and both HOST/ACCEL
+        builds trace the identical transform.  The sampled token's
+        absolute position is ``index + 1`` (the fed token's KV lands at
+        ``index``; the new token sits one past it), matching
+        ``prefill_at_sampled``'s position convention.  The sampling
+        vectors are (B,) data leaves — one static compile signature
+        regardless of the request mix (binary.shape_key), and the
+        logprob leaf is always present so opting in to logprobs never
+        forks the signature."""
         from repro.models import sampling as sampling_lib
         fwd = {k: v for k, v in batch.items()
                if k not in sampling_lib.SAMPLING_KEYS}
@@ -200,10 +206,10 @@ class Model:
         idx = batch["index"]
         B = logits.shape[0]
         pos = (idx if idx.ndim else jnp.broadcast_to(idx, (B,))) + 1
-        toks = sampling_lib.sample_tokens(
+        toks, logps = sampling_lib.sample_tokens(
             logits[:, -1, :], batch["temperature"], batch["top_k"],
             batch["top_p"], batch["seed"], pos)
-        return toks, new_cache
+        return toks, logps, new_cache
 
     def decode(self, params, cache, batch, backend: str = "xla"
                ) -> tuple[jax.Array, dict]:

@@ -102,7 +102,15 @@ def _sample_row(logits, temperature, top_k, top_p, seed, pos):
     # Gumbel-max draw == categorical(softmax(z)), no normalisation needed
     g = jax.random.gumbel(key, (V,), jnp.float32)
     sampled = jnp.argmax(z + g).astype(jnp.int32)
-    return jnp.where(temperature <= 0.0, greedy, sampled)
+    tok = jnp.where(temperature <= 0.0, greedy, sampled)
+    # chosen-token logprob under the UNMODIFIED model distribution
+    # (raw logits, before temperature/filters): well-defined for greedy
+    # and sampled rows alike, and a pure function of (logits, tok) so it
+    # is byte-identical across backends and preemption history.  Always
+    # computed — the step signature must stay static whether or not the
+    # request opted in (the engine decides what to surface).
+    logp = jax.nn.log_softmax(logits)[tok]
+    return tok, logp
 
 
 def sample_tokens(logits, temperature, top_k, top_p, seed, pos):
@@ -110,7 +118,8 @@ def sample_tokens(logits, temperature, top_k, top_p, seed, pos):
 
     logits: (B, V); temperature/top_p: (B,) f32; top_k/seed/pos: (B,)
     i32 — ``pos`` is each row's absolute position of the token being
-    sampled.  Returns (B,) int32 token ids.
+    sampled.  Returns ((B,) int32 token ids, (B,) f32 chosen-token
+    logprobs under the raw model distribution).
     """
     return jax.vmap(_sample_row)(
         logits, temperature.astype(jnp.float32), top_k.astype(jnp.int32),

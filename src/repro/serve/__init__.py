@@ -2,6 +2,7 @@ from repro.serve.api import (
     GenerationRequest, RequestHandle, RequestOutput, SamplingParams,
 )
 from repro.serve.batch import BlockPool, PagedSlotManager, Slot, SlotManager
+from repro.serve.cluster import ClusterFrontEnd, EngineWorker
 from repro.serve.engine import (
     ContinuousBatchingEngine, GenerationResult, ServeEngine, prompt_bucket,
 )

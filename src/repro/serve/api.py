@@ -56,12 +56,22 @@ class SamplingParams:
     determines the draw for a given token position: the in-graph key is
     ``fold_in(PRNGKey(seed), absolute_position)``, independent of slot
     index, batch composition, backend, and preemption history.
+
+    ``logprobs=True`` surfaces each emitted token's logprob in
+    ``RequestOutput.logprobs`` (and streams it via the handle's
+    ``logprobs`` list).  The logprob is the chosen token's log-mass
+    under the RAW model distribution (before temperature/top-k/top-p),
+    so it is well-defined for greedy requests too and identical on
+    every backend.  The jitted step always computes it — opting in
+    changes what is *returned to the caller*, never the compile
+    signature.
     """
 
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
     seed: int = 0
+    logprobs: bool = False
 
     def __post_init__(self):
         if self.temperature < 0.0:
@@ -72,6 +82,8 @@ class SamplingParams:
             raise ValueError(f"top_k must be >= 0 (0 = off): {self.top_k}")
         if not isinstance(self.seed, (int, np.integer)):
             raise ValueError(f"seed must be an int: {self.seed!r}")
+        if not isinstance(self.logprobs, bool):
+            raise ValueError(f"logprobs must be a bool: {self.logprobs!r}")
 
     @property
     def greedy(self) -> bool:
@@ -130,6 +142,10 @@ class RequestOutput:
     inter-token time over the decode steps (0 for single-token
     outputs).  Aborted requests carry whatever tokens were generated
     before the abort.
+
+    ``logprobs``: (n_generated,) f32 chosen-token logprobs, aligned
+    with ``tokens``, when the request set ``SamplingParams.logprobs``;
+    ``None`` otherwise.
     """
 
     req_id: int
@@ -138,9 +154,17 @@ class RequestOutput:
     queue_wait_s: float = 0.0
     ttft_s: float = 0.0
     tpot_s: float = 0.0
+    logprobs: Optional[np.ndarray] = None
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.logprobs is not None:
+            self.logprobs = np.asarray(self.logprobs,
+                                       np.float32).reshape(-1)
+            if self.logprobs.shape != self.tokens.shape:
+                raise ValueError(
+                    f"logprobs/tokens length mismatch: "
+                    f"{self.logprobs.shape} vs {self.tokens.shape}")
         if self.finish_reason not in FINISH_REASONS:
             raise ValueError(f"finish_reason must be one of {FINISH_REASONS}:"
                              f" {self.finish_reason!r}")
@@ -174,6 +198,7 @@ class RequestHandle:
         self.req_id = request.req_id
         self.on_token = on_token
         self.tokens: list[int] = []          # emitted so far
+        self.logprobs: list[float] = []      # aligned with tokens
         self._engine = engine
         self._stream: queue_lib.Queue = queue_lib.Queue()
         self._done = threading.Event()
@@ -184,11 +209,13 @@ class RequestHandle:
         self.t_last_token: Optional[float] = None
 
     # ------------------------------------------------------ engine side
-    def _push(self, token: int, now: float) -> None:
+    def _push(self, token: int, now: float,
+              logprob: float = 0.0) -> None:
         if self.t_first_token is None:
             self.t_first_token = now
         self.t_last_token = now
         self.tokens.append(token)
+        self.logprobs.append(float(logprob))
         self._stream.put(token)
         if self.on_token is not None:
             self.on_token(token)
@@ -201,6 +228,8 @@ class RequestHandle:
         self._output = RequestOutput(
             req_id=self.req_id,
             tokens=np.asarray(self.tokens, np.int32),
+            logprobs=(np.asarray(self.logprobs, np.float32)
+                      if self.request.sampling.logprobs else None),
             finish_reason=finish_reason,
             queue_wait_s=max((self.t_admit if self.t_admit is not None
                               else now) - arrival, 0.0),

@@ -53,6 +53,7 @@ class Slot:
     pos: int                   # next cache write position (= tokens cached)
     last_token: int            # token to feed at the next decode step
     tokens: list[int] = dataclasses.field(default_factory=list)
+    logprobs: list[float] = dataclasses.field(default_factory=list)
     blocks: list[int] = dataclasses.field(default_factory=list)  # paged only
     seq: int = 0               # admission order (preemption picks youngest)
     t_admit: float = 0.0       # when this occupancy was admitted
@@ -110,10 +111,13 @@ class SlotManager:
     def admit(self, request: GenerationRequest, first_token: int, *,
               blocks: list[int] | None = None,
               tokens: list[int] | None = None,
+              logprobs: list[float] | None = None,
+              first_logprob: float = 0.0,
               pos: int | None = None) -> Slot:
-        """Claim a row for ``request`` whose prefill emitted ``first_token``.
-        ``tokens``/``pos`` override the fresh-admission defaults when a
-        preempted request resumes with generation already under way."""
+        """Claim a row for ``request`` whose prefill emitted ``first_token``
+        (with chosen-token logprob ``first_logprob``).  ``tokens`` /
+        ``logprobs`` / ``pos`` override the fresh-admission defaults when
+        a preempted request resumes with generation already under way."""
         if not self._free:
             raise RuntimeError("no free slot")
         self.validate(request)
@@ -122,6 +126,8 @@ class SlotManager:
                     pos=request.prompt_len if pos is None else pos,
                     last_token=first_token,
                     tokens=[first_token] if tokens is None else list(tokens),
+                    logprobs=([first_logprob] if logprobs is None
+                              else list(logprobs)),
                     blocks=blocks or [], seq=next(self._seq))
         self.active[idx] = slot
         self.slot_uses[idx] += 1

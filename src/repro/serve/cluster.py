@@ -1,0 +1,265 @@
+"""Multi-engine cluster serving under ONE central scheduler.
+
+Closes the ROADMAP's multi-process item: N ``ContinuousBatchingEngine``
+workers (each with its own ``XarTrekRuntime``, compiled variants and
+kernel bank) register with one central ``SchedulerServer``; the shared
+``SchedulingPolicy`` is evaluated over the *aggregate* cross-engine
+``LoadSignals``, so one engine's queue pressure migrates another
+engine's decode steps to ACCEL — Algorithm 2 balancing real co-tenant
+load, as in the paper's evaluation, instead of a synthetic process
+counter.
+
+Topology (the paper's Figure-2 run-time, serve-shaped):
+
+* ``ClusterFrontEnd`` owns the central scheduler (policy + threshold
+  table + load monitor) and, by default, a ``TcpSchedulerServer``
+  wrapping it — workers then talk to the scheduler over the
+  paper-faithful line-JSON socket transport (``transport="inproc"``
+  skips the sockets for tests).
+* Each ``EngineWorker`` runs its engine loop on its own thread; its
+  runtime's scheduler *clients* (one per step function, plus the
+  signal publisher) connect to the central server, and its kernel bank
+  is registered there so residency checks and async reconfigurations
+  reach the worker that owns the compiled variants.
+* ``ClusterFrontEnd.submit(GenerationRequest)`` routes to the
+  least-loaded worker (queued + in-flight) and returns the v2
+  ``RequestHandle`` — streaming, ``result()``, ``abort()`` all work
+  unchanged; the application-facing contract does not know the cluster
+  exists.
+
+Workers are threads, not OS processes: one JAX runtime serves all
+engines (this is the single-host analogue; the TCP control plane is
+exactly what a multi-host deployment would speak).  Model parameters
+are built once and shared across workers — co-tenants of one
+accelerator, as in SYNERGY's multiplexing argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.model_config import ModelConfig
+from repro.core.function import FunctionRegistry
+from repro.core.monitor import LoadMonitor
+from repro.core.policy import PolicyLike
+from repro.core.runtime import XarTrekRuntime
+from repro.core.scheduler import SchedulerServer, TcpSchedulerServer
+from repro.core.targets import Platform, TPU_PLATFORM
+from repro.core.thresholds import ThresholdTable
+from repro.serve.api import GenerationRequest, RequestHandle, RequestOutput
+from repro.serve.engine import ContinuousBatchingEngine
+
+
+class EngineWorker:
+    """One engine + runtime + serve-loop thread behind the cluster."""
+
+    def __init__(self, worker_id: str, cfg: ModelConfig,
+                 server: SchedulerServer,
+                 scheduler_address: Optional[tuple] = None,
+                 params=None, seed: int = 0,
+                 **engine_kwargs):
+        self.worker_id = worker_id
+        self.runtime = XarTrekRuntime(
+            registry=FunctionRegistry(), server=server,
+            scheduler_address=scheduler_address)
+        self.engine = ContinuousBatchingEngine(
+            cfg, params=params, seed=seed, runtime=self.runtime,
+            fn_prefix=worker_id, **engine_kwargs)
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=f"engine-{worker_id}")
+
+    # ----------------------------------------------------------- serving
+    def start(self) -> None:
+        self._thread.start()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stop.set()
+        self._wake.set()
+        self._thread.join(timeout)
+        for client in self.runtime._clients.values():
+            close = getattr(client, "close", None)
+            if close is not None:
+                close()
+
+    def _loop(self) -> None:
+        """Drain-and-wait: ``run()`` serves everything queued (new
+        submissions land in the thread-safe queue mid-run and are
+        admitted the same loop), then the thread parks until the next
+        ``submit`` wakes it.  run()'s return dict is dropped — the
+        caller-facing results are the RequestHandles, which resolve the
+        step each request finishes (reading a worker-side dict here
+        would race the front-end, whose drain() returns as soon as the
+        handles resolve)."""
+        while not self._stop.is_set():
+            if len(self.engine.queue) or self.engine.slots.active:
+                self.engine.run()
+            else:
+                self._wake.wait(timeout=0.05)
+                self._wake.clear()
+
+    def submit(self, request: GenerationRequest,
+               on_token=None) -> RequestHandle:
+        handle = self.engine.submit(request, on_token=on_token)
+        self._wake.set()
+        return handle
+
+    def load(self) -> int:
+        """Routing weight: requests queued plus rows in flight."""
+        return len(self.engine.queue) + len(self.engine.slots.active)
+
+
+class ClusterFrontEnd:
+    """N engine workers, one scheduler, one ``submit()`` surface.
+
+    ``policy`` is the SHARED SchedulingPolicy (instance or alias
+    string) the central server evaluates over aggregate signals.
+    ``transport="tcp"`` (default) runs the scheduler behind a
+    ``TcpSchedulerServer`` on loopback; ``"inproc"`` wires the workers
+    straight to the server object.  ``engine_kwargs`` (max_slots,
+    max_seq, paged, block_size, ...) apply to every worker.  Parameters
+    are built once (worker 0) and shared.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_engines: int = 2,
+                 policy: PolicyLike = "xartrek",
+                 transport: str = "tcp",
+                 platform: Platform = TPU_PLATFORM,
+                 table: Optional[ThresholdTable] = None,
+                 params=None, seed: int = 0,
+                 worker_prefix: str = "w",
+                 **engine_kwargs):
+        if n_engines < 1:
+            raise ValueError(f"need at least one engine: {n_engines}")
+        if transport not in ("tcp", "inproc"):
+            raise ValueError(f"transport must be tcp|inproc: {transport!r}")
+        self.cfg = cfg
+        self.table = table or ThresholdTable()
+        self.server = SchedulerServer(platform, self.table, bank=None,
+                                      monitor=LoadMonitor(platform),
+                                      policy=policy)
+        self._tcp: Optional[TcpSchedulerServer] = None
+        address = None
+        if transport == "tcp":
+            self._tcp = TcpSchedulerServer(self.server)
+            address = self._tcp.start()
+        self.workers: list[EngineWorker] = []
+        for i in range(n_engines):
+            w = EngineWorker(f"{worker_prefix}{i}", cfg, self.server,
+                             scheduler_address=address,
+                             params=params, seed=seed, **engine_kwargs)
+            if params is None:
+                params = w.engine.params          # share across workers
+            self.workers.append(w)
+        self._owner: dict[int, EngineWorker] = {}
+        self._handles: dict[int, RequestHandle] = {}
+        # req_id -> worker_id of requests completed by the last drain()
+        # (ownership survives the pop so callers can attribute outputs
+        # per engine without racing the worker threads)
+        self.last_owners: dict[int, str] = {}
+        self._lock = threading.Lock()
+        self._started = False
+
+    # ------------------------------------------------------------ control
+    def start(self) -> "ClusterFrontEnd":
+        if not self._started:
+            self._started = True
+            for w in self.workers:
+                w.start()
+        return self
+
+    def stop(self) -> None:
+        for w in self.workers:
+            w.stop()
+        if self._tcp is not None:
+            self._tcp.stop()
+        self._started = False
+
+    def __enter__(self) -> "ClusterFrontEnd":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def warmup(self, timeout: float = 120.0) -> None:
+        """Run one tiny request through every worker, then zero the
+        stats: engines compile their lazy pieces (slot-write /
+        block-scatter jits) outside any measured or scenario-sensitive
+        window, exactly like the single-engine benchmarks' warm pass.
+        Without this, a worker's first admission can stall seconds in
+        compilation while its co-tenants' load comes and goes unseen."""
+        if not self._started:
+            raise RuntimeError("cluster not started (use start() or with)")
+        vocab = max(getattr(self.cfg, "vocab_size", 2), 2)
+        handles = [w.submit(GenerationRequest(
+            np.arange(1, 5, dtype=np.int32) % vocab, max_new_tokens=2))
+            for w in self.workers]
+        for h in handles:
+            h.result(timeout=timeout)
+        for w in self.workers:
+            w.runtime.call_log.clear()
+            w.engine.reset_stats()
+
+    def set_decode_thresholds(self, fpga_thr: float,
+                              arm_thr: float = float("inf")) -> None:
+        """Seed every worker's decode-step threshold row (the Table-2
+        artifact the compiler would have produced): the load above
+        which offloading that worker's decode to ACCEL is profitable."""
+        for w in self.workers:
+            row = self.table.row(w.engine._decode_name)
+            row.fpga_thr, row.arm_thr = fpga_thr, arm_thr
+
+    # ------------------------------------------------------------- serve
+    def submit(self, request: GenerationRequest,
+               on_token=None) -> RequestHandle:
+        """Route one request to the least-loaded worker; the returned
+        handle is the worker engine's own (streaming/abort included)."""
+        if not self._started:
+            raise RuntimeError("cluster not started (use start() or with)")
+        with self._lock:
+            worker = min(self.workers, key=lambda w: w.load())
+            handle = worker.submit(request, on_token=on_token)
+            self._owner[request.req_id] = worker
+            self._handles[request.req_id] = handle
+        return handle
+
+    def drain(self, timeout: float = 120.0) -> dict[int, RequestOutput]:
+        """Block until every submitted request finished; returns (and
+        forgets) their outputs keyed by req_id."""
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            handles = dict(self._handles)
+        out = {}
+        for rid, h in handles.items():
+            out[rid] = h.result(timeout=max(deadline - time.monotonic(),
+                                            0.001))
+        with self._lock:
+            self.last_owners = {
+                rid: self._owner[rid].worker_id
+                for rid in out if rid in self._owner}
+            for rid in out:
+                self._handles.pop(rid, None)
+                self._owner.pop(rid, None)
+        return out
+
+    # ------------------------------------------------------------- stats
+    def summary(self) -> dict:
+        """Cluster-wide accounting: per-worker runtime summaries plus
+        the aggregate migration count and the central server's decision
+        histogram — the benchmark artifact's proof that co-tenant load
+        moved steps between targets."""
+        per_engine = {w.worker_id: w.runtime.summary()
+                      for w in self.workers}
+        return {
+            "per_engine": per_engine,
+            "migrations": sum(s["migrations"]
+                              for s in per_engine.values()),
+            "decisions": {k.value: v
+                          for k, v in self.server.decisions.items()},
+            "signals": dataclasses.asdict(self.server.signals()),
+        }

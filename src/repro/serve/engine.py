@@ -29,6 +29,7 @@ multi-tenant arrival stream.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
@@ -41,6 +42,9 @@ import numpy as np
 
 from repro.configs.model_config import ModelConfig
 from repro.core.function import MigratableFunction
+from repro.core.policy import (
+    LoadSignals, PinAccel, PinHost, SchedulingPolicy, ewma, resolve_policy,
+)
 from repro.core.runtime import XarTrekRuntime
 from repro.core.targets import TargetKind
 from repro.models.model import build_model
@@ -52,7 +56,8 @@ from repro.serve.api import (
 from repro.serve.batch import PagedSlotManager, Slot, SlotManager
 from repro.serve.scheduler import RequestQueue
 
-_SERVE_DEPRECATION_WARNED = False
+_BACKEND_DEPRECATION_WARNED = False
+_ON_STEP_DEPRECATION_WARNED = False
 
 
 @dataclasses.dataclass
@@ -174,9 +179,11 @@ class ContinuousBatchingEngine:
     ``RequestOutput`` (tokens, finish_reason stop|length|aborted, and
     queue-wait/TTFT/TPOT metrics).  ``abort(req_id)`` cancels a queued
     or in-flight request: its slot — and, under paging, its KV blocks —
-    free the same loop iteration.  The v1 surface (``serve()`` dict of
-    bare token arrays, ``scheduler.Request``) remains as a deprecated
-    shim.
+    free the same loop iteration.  The v1 surface (``serve()``,
+    ``scheduler.Request``) is gone: both raise with a pointer at the
+    v2 replacement.  ``SamplingParams(logprobs=True)`` additionally
+    surfaces each token's chosen-token logprob in
+    ``RequestOutput.logprobs``.
 
     **In-graph sampling.**  Each request's ``SamplingParams``
     (temperature/top_k/top_p/seed; temperature 0.0 = greedy) ride the
@@ -206,26 +213,41 @@ class ContinuousBatchingEngine:
 
     With a ``runtime``, every prefill/decode dispatches through
     ``XarTrekRuntime.call`` under the names ``{fn_prefix}_prefill`` /
-    ``{fn_prefix}_decode`` so Algorithm 2 picks the target per step; the
-    engine registers DISTINCT builds per step via ``MultiTargetBinary``:
-    HOST is the XLA reference math and ACCEL routes the same ABI through
-    the Pallas kernels (flash prefill; flash-decoding / paged-streaming
-    decode) — a migration is a real kernel swap, not a label change.
-    Both are compiled eagerly at ``prepare()`` (``eager_accel=True``, the
-    default) so the first migration never pays compile time inside the
-    timed region; pass ``eager_accel=False`` to keep the paper's
-    asynchronous FPGA-pre-configuration behaviour instead.  Unless the
-    caller pre-registered its own variants.
+    ``{fn_prefix}_decode`` so the scheduling policy picks the target per
+    step; the engine registers DISTINCT builds per step via
+    ``MultiTargetBinary``: HOST is the XLA reference math and ACCEL
+    routes the same ABI through the Pallas kernels (flash prefill;
+    flash-decoding / paged-streaming decode) — a migration is a real
+    kernel swap, not a label change.  Both are compiled eagerly at
+    ``prepare()`` (``eager_accel=True``, the default) so the first
+    migration never pays compile time inside the timed region; pass
+    ``eager_accel=False`` to keep the paper's asynchronous
+    FPGA-pre-configuration behaviour instead.  Unless the caller
+    pre-registered its own variants.
 
-    ``backend`` selects the DIRECT path (no runtime): "host" serves
-    every step on XLA, "accel" on the Pallas kernels, and "auto"
-    (default) behaves as "host" without a runtime while leaving target
-    choice to the scheduler with one.  int8 KV caches have no Pallas
-    dequantising decode yet, so their ACCEL variant stays on XLA math.
+    **Placement is a ``SchedulingPolicy``** (``core/policy``): pass
+    ``policy=`` a policy instance or alias string.  ``PinHost`` /
+    ``PinAccel`` pin the direct (no-runtime) path to the XLA / Pallas
+    build; every other policy (``XarTrekHeuristic``,
+    ``LatencyAwarePolicy``, custom) needs a ``runtime`` — the engine
+    installs the policy on the runtime's scheduler server.  int8 KV
+    caches have no Pallas dequantising decode yet, so their ACCEL
+    variant stays on XLA math.
 
-    ``on_step`` (callable, receives the engine) fires after every decode
-    step — benchmarks and tests use it to flip scheduler policy
-    mid-stream (forced HOST->ACCEL->HOST migration schedules).
+    **Signals.**  Each loop iteration the engine publishes a
+    ``LoadSignals`` snapshot (queue depth, active slots, free-KV
+    fraction, per-target recent decode ms, TTFT/TPOT p50) to the
+    scheduler server — the policy input is real telemetry, not the
+    synthetic process counter (which remains one merged source).  In a
+    multi-engine cluster (``serve/cluster.py``) the server aggregates
+    snapshots across engines, so co-tenant pressure migrates this
+    engine's steps.
+
+    Deprecated escape hatches (warn once per process, absorbed by the
+    policy API): ``backend="host"/"accel"`` maps to
+    ``policy=PinHost()/PinAccel()``; ``on_step`` (fires with the engine
+    after each decode step) is superseded by scripted policies that
+    decide from ``LoadSignals`` / their own decision counters.
 
     Row-independent attention families only: ssm/hybrid caches cannot
     seek per-row, and moe routing couples rows through the shared
@@ -241,8 +263,10 @@ class ContinuousBatchingEngine:
                  paged: bool = False, block_size: int = 32,
                  num_blocks: Optional[int] = None,
                  lane_align: Optional[bool] = None,
+                 policy: Optional[SchedulingPolicy] = None,
                  backend: str = "auto", eager_accel: bool = True,
                  on_step=None):
+        global _BACKEND_DEPRECATION_WARNED, _ON_STEP_DEPRECATION_WARNED
         if cfg.family not in ("dense", "vlm"):
             # ssm/hybrid caches are position-synchronised; moe routing is
             # batch-coupled (capacity = f(batch tokens), so junk tokens
@@ -256,13 +280,39 @@ class ContinuousBatchingEngine:
                 "paged KV does not support int8 cache quantization yet")
         if backend not in ("host", "accel", "auto"):
             raise ValueError(f"backend must be host|accel|auto: {backend!r}")
+        if backend != "auto":
+            if policy is not None:
+                raise ValueError(
+                    "pass either policy= or the deprecated backend=, "
+                    "not both")
+            if not _BACKEND_DEPRECATION_WARNED:
+                _BACKEND_DEPRECATION_WARNED = True
+                warnings.warn(
+                    "ContinuousBatchingEngine(backend=...) is deprecated; "
+                    "pass policy=PinHost()/PinAccel() (core.policy)",
+                    DeprecationWarning, stacklevel=2)
+            policy = PinHost() if backend == "host" else PinAccel()
+        if on_step is not None and not _ON_STEP_DEPRECATION_WARNED:
+            _ON_STEP_DEPRECATION_WARNED = True
+            warnings.warn(
+                "ContinuousBatchingEngine(on_step=...) is deprecated; "
+                "use a scripted SchedulingPolicy (it sees LoadSignals "
+                "every decision)", DeprecationWarning, stacklevel=2)
         self.cfg = cfg
         self.model = build_model(cfg, mesh)
         self.mesh = mesh
         self.runtime = runtime
         self.min_bucket = min_bucket
         self.paged = paged
-        self.backend = backend
+        self.policy = resolve_policy(policy) if policy is not None else None
+        if (self.policy is not None and runtime is None
+                and not isinstance(self.policy, (PinHost, PinAccel))):
+            raise ValueError(
+                f"policy {getattr(self.policy, 'name', self.policy)!r} "
+                f"decides per step and needs a runtime=; only "
+                f"PinHost/PinAccel can drive the direct path")
+        if runtime is not None and self.policy is not None:
+            runtime.server.policy = self.policy
         self.on_step = on_step
         if params is None:
             params = self.model.init(jax.random.PRNGKey(seed))
@@ -304,10 +354,11 @@ class ContinuousBatchingEngine:
         else:
             self.slots = SlotManager(max_slots, max_seq)
             self.cache = self.model.init_cache(max_slots, max_seq)
-        # direct-path (no-runtime) step functions honour the backend
-        # selector; "auto" without a runtime serves on HOST math.  Both
+        # direct-path (no-runtime) step functions honour the pinned
+        # policy; no policy (or PinHost) serves on HOST math.  Both
         # steps sample IN-GRAPH and return tokens, not logits.
-        direct = "pallas" if backend == "accel" else "xla"
+        direct = "pallas" if isinstance(self.policy, PinAccel) else "xla"
+        self._direct_impl = direct
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill_at_sampled(p, b, backend=direct))
         # donate the cache: without aliasing every token copies the full
@@ -329,12 +380,22 @@ class ContinuousBatchingEngine:
             donate_argnums=(0,))
         self._prefill_name = f"{fn_prefix}_prefill"
         self._decode_name = f"{fn_prefix}_decode"
+        self.engine_id = fn_prefix
         self.results: dict[int, RequestOutput] = {}
-        self._resume: dict[int, list[int]] = {}   # req_id -> tokens so far
+        # req_id -> (tokens, logprobs) generated before preemption
+        self._resume: dict[int, tuple[list[int], list[float]]] = {}
         self._handles: dict[int, RequestHandle] = {}
         self._abort_pending: set[int] = set()
         self._abort_lock = threading.Lock()
         self._clock0: Optional[float] = None
+        # serve telemetry for LoadSignals: per-target EWMA of the direct
+        # path's decode step ms (runtime-dispatched steps read the
+        # binary's compile_stats instead) + a window of recent finished
+        # requests' latency metrics
+        self._direct_step_ms: dict[str, Optional[float]] = {
+            "host": None, "accel": None}
+        self._latency_window: collections.deque = collections.deque(
+            maxlen=64)
         self.reset_stats()
         if runtime is not None:
             self._prepare_runtime(runtime, fn_prefix, eager_accel)
@@ -350,6 +411,49 @@ class ContinuousBatchingEngine:
         if self._clock0 is None:
             return 0.0
         return time.perf_counter() - self._clock0
+
+    # ---------------------------------------------------------- telemetry
+    def signals(self) -> LoadSignals:
+        """This engine's serve-telemetry snapshot — the real policy
+        input that replaced the synthetic process counter: queue depth,
+        in-flight rows, free KV capacity (block pool under paging, rows
+        otherwise), per-target recent decode step ms (EWMA from the
+        runtime binary's ``compile_stats``, or the direct path's own
+        timer) and TTFT/TPOT p50 over recently finished requests."""
+        if self.paged:
+            free = (self.slots.pool.free_blocks()
+                    / max(self.slots.pool.num_blocks, 1))
+        else:
+            cap = self.slots.max_slots
+            free = (cap - len(self.slots.active)) / max(cap, 1)
+        host_ms = self._direct_step_ms["host"]
+        accel_ms = self._direct_step_ms["accel"]
+        if self.runtime is not None:
+            binary = self.runtime.binaries.get(self._decode_name)
+            if binary is not None:
+                cs = binary.compile_stats
+                host_ms = cs.get(TargetKind.HOST, {}).get(
+                    "recent_exec_ms", host_ms)
+                accel_ms = cs.get(TargetKind.ACCEL, {}).get(
+                    "recent_exec_ms", accel_ms)
+        ttft = sorted(t for t, _ in self._latency_window)
+        tpot = sorted(t for _, t in self._latency_window)
+        return LoadSignals(
+            queue_depth=len(self.queue),
+            active_slots=len(self.slots.active),
+            free_kv_frac=free,
+            host_decode_ms=host_ms,
+            accel_decode_ms=accel_ms,
+            ttft_p50_s=ttft[len(ttft) // 2] if ttft else None,
+            tpot_p50_s=tpot[len(tpot) // 2] if tpot else None,
+        )
+
+    def _publish_signals(self) -> None:
+        """Feed the snapshot to the scheduler (each loop iteration):
+        with a shared/central server this is how one engine's pressure
+        reaches every co-tenant's placement decision."""
+        if self.runtime is not None:
+            self.runtime.publish_signals(self.engine_id, self.signals())
 
     # ------------------------------------------------- runtime plumbing
     def _prepare_runtime(self, rt: XarTrekRuntime, fn_prefix: str,
@@ -368,8 +472,8 @@ class ContinuousBatchingEngine:
         # HOST keeps the XLA reference; ACCEL is a genuinely different
         # build on the Pallas kernels (same ABI, checked at prepare) —
         # except int8 caches, whose dequantising kernel doesn't exist
-        # yet, and backend="host", which pins both variants to XLA
-        accel_impl = ("pallas" if (self.backend != "host"
+        # yet, and PinHost, which pins both variants to XLA
+        accel_impl = ("pallas" if (not isinstance(self.policy, PinHost)
                                    and self.cfg.kv_cache_dtype != "int8")
                       else "xla")
         host_prefill, host_decode = step_fns("xla")
@@ -498,7 +602,7 @@ class ContinuousBatchingEngine:
         if not self.paged:
             return True
         resume = self._resume.get(req.req_id)
-        plen = req.prompt_len + (len(resume) - 1 if resume else 0)
+        plen = req.prompt_len + (len(resume[0]) - 1 if resume else 0)
         return self.slots.can_admit(plen, req)
 
     def _admit(self, req: GenerationRequest, now: float = 0.0) -> None:
@@ -512,7 +616,7 @@ class ContinuousBatchingEngine:
             feed = req.prompt
         else:
             feed = np.concatenate(
-                [req.prompt, np.asarray(resume[:-1], np.int32)])
+                [req.prompt, np.asarray(resume[0][:-1], np.int32)])
         S = len(feed)
         Sb = prompt_bucket(S, self.min_bucket)
         toks = np.zeros((1, Sb), np.int32)
@@ -521,22 +625,26 @@ class ContinuousBatchingEngine:
                  "length": jnp.full((1,), S, jnp.int32),
                  **sampling_leaves(req.sampling, 1)}
         if self.runtime is not None:
-            tok0, pc = self.runtime.call(self._prefill_name,
-                                         self.params, batch)
+            tok0, lp0, pc = self.runtime.call(self._prefill_name,
+                                              self.params, batch)
         else:
-            tok0, pc = self._prefill(self.params, batch)
+            tok0, lp0, pc = self._prefill(self.params, batch)
         self.stats["prefills"] += 1
         if resume is None:
             # first token sampled IN-GRAPH at position = prompt length
-            first, tokens = int(np.asarray(tok0)[0]), None
+            first, tokens, logprobs = int(np.asarray(tok0)[0]), None, None
+            first_lp = float(np.asarray(lp0)[0])
         else:
             # the pending token was already sampled before preemption;
-            # the resume prefill only rebuilds the KV (its token unused)
-            first, tokens = resume[-1], resume
+            # the resume prefill only rebuilds the KV (its token unused,
+            # and the stashed logprobs replay alongside the tokens)
+            first, (tokens, logprobs) = resume[0][-1], resume
+            first_lp = 0.0                       # overridden by logprobs
         if self.paged:
             blocks = self.slots.pool.alloc(self.slots.blocks_for(S))
             slot = self.slots.admit(req, first, blocks=blocks,
-                                    tokens=tokens, pos=S)
+                                    tokens=tokens, logprobs=logprobs,
+                                    first_logprob=first_lp, pos=S)
             # scatter the bucketed prefill KV (leaves (L,1,S_bucket,KV,hd),
             # seq axis 2) into the slot's physical blocks; the tail of the
             # last block carries junk KV, which write-then-attend decode
@@ -544,7 +652,9 @@ class ContinuousBatchingEngine:
             self.cache = self._scatter(self.cache, pc,
                                        jnp.asarray(blocks, jnp.int32))
         else:
-            slot = self.slots.admit(req, first, tokens=tokens, pos=S)
+            slot = self.slots.admit(req, first, tokens=tokens,
+                                    logprobs=logprobs,
+                                    first_logprob=first_lp, pos=S)
             # write the request's bucketed KV into its cache row (leaves
             # are (L, 1, S_bucket, KV, hd|1); seq is axis 2).  Positions
             # [S, S_bucket) carry pad KV, overwritten before any read
@@ -572,12 +682,15 @@ class ContinuousBatchingEngine:
         handle = self._handles.get(slot.request.req_id)
         if handle is None:
             return
-        for tok in slot.tokens[len(handle.tokens):]:
-            handle._push(int(tok), now)
+        start = len(handle.tokens)
+        for tok, lp in zip(slot.tokens[start:], slot.logprobs[start:]):
+            handle._push(int(tok), now, lp)
 
     def _finalize(self, handle: RequestHandle, reason: str,
                   now: float) -> None:
-        self.results[handle.req_id] = handle._finish(reason, now)
+        out = handle._finish(reason, now)
+        self.results[handle.req_id] = out
+        self._latency_window.append((out.ttft_s, out.tpot_s))
 
     def _finish(self, slot: Slot, now: float = 0.0) -> None:
         self._sync_handle(slot, now)
@@ -591,11 +704,13 @@ class ContinuousBatchingEngine:
     # ----------------------------------------------------------- decode
     def _preempt(self, slot: Slot) -> None:
         """Evict a live slot to relieve pool pressure: stash its generated
-        tokens, free its blocks, requeue the request at the front.  The
-        resume path re-prefills prompt+generated, so output is unchanged
-        (sampled tokens replay from the stash; sampling keys depend only
-        on (seed, position), so post-resume draws are unchanged too)."""
-        self._resume[slot.request.req_id] = list(slot.tokens)
+        tokens (+ logprobs), free its blocks, requeue the request at the
+        front.  The resume path re-prefills prompt+generated, so output
+        is unchanged (sampled tokens replay from the stash; sampling
+        keys depend only on (seed, position), so post-resume draws are
+        unchanged too)."""
+        self._resume[slot.request.req_id] = (list(slot.tokens),
+                                             list(slot.logprobs))
         self.slots.preempt(slot)
         self.queue.requeue(slot.request)
 
@@ -630,17 +745,25 @@ class ContinuousBatchingEngine:
         if self.paged:
             batch["block_table"] = jnp.asarray(self.slots.block_table())
         if self.runtime is not None:
-            toks, self.cache = self.runtime.call(
+            toks, logps, self.cache = self.runtime.call(
                 self._decode_name, self.params, self.cache, batch)
+            toks = np.asarray(toks)        # (B,) sampled in-graph
         else:
-            toks, self.cache = self._decode(self.params, self.cache, batch)
+            t0 = time.perf_counter()
+            toks, logps, self.cache = self._decode(self.params, self.cache,
+                                                   batch)
+            toks = np.asarray(toks)        # forces completion
+            ms = (time.perf_counter() - t0) * 1e3
+            tgt = "accel" if self._direct_impl == "pallas" else "host"
+            self._direct_step_ms[tgt] = ewma(self._direct_step_ms[tgt], ms)
         self.stats["decode_steps"] += 1
         self.stats["decode_row_util"] += len(active) / self.slots.max_slots
-        toks = np.asarray(toks)            # (B,) sampled in-graph
+        logps = np.asarray(logps)
         now = self._now()
         for slot in active:
             t = int(toks[slot.index])
             slot.tokens.append(t)
+            slot.logprobs.append(float(logps[slot.index]))
             slot.last_token = t
             slot.pos += 1
             slot.t_last_token = now
@@ -668,6 +791,10 @@ class ContinuousBatchingEngine:
             while len(self.queue) or self.slots.active:
                 now = self._now()
                 self._service_aborts(now)
+                # publish BEFORE admission: the policy deciding this
+                # iteration's steps sees the arrived-but-unadmitted
+                # pressure, and a central scheduler sees it cross-engine
+                self._publish_signals()
                 while self.slots.has_free():
                     req = self.queue.pop_arrived(now)
                     if req is None:
@@ -694,25 +821,23 @@ class ContinuousBatchingEngine:
             raise
         finally:
             self._clock0 = None
+            # retract this run's pressure: without a final snapshot the
+            # scheduler would keep aggregating the last IN-RUN publish
+            # (nonzero queue/slots) long after this engine went idle,
+            # and co-tenants would migrate against phantom load
+            self._publish_signals()
         out, self.results = self.results, {}
         for rid in out:
             self._handles.pop(rid, None)
         return out
 
     def serve(self, requests: Iterable[GenerationRequest] = (),
-              poll_s: float = 0.002) -> dict[int, np.ndarray]:
-        """Deprecated v1 surface: like ``run()`` but returns bare
-        {req_id: (n,) int32 token arrays} without finish reasons or
-        metrics.  Warns once per process; use ``run()``."""
-        global _SERVE_DEPRECATION_WARNED
-        if not _SERVE_DEPRECATION_WARNED:
-            _SERVE_DEPRECATION_WARNED = True
-            warnings.warn(
-                "ContinuousBatchingEngine.serve() returning bare token "
-                "arrays is deprecated; use run() -> RequestOutput",
-                DeprecationWarning, stacklevel=2)
-        return {rid: out.tokens
-                for rid, out in self.run(requests, poll_s=poll_s).items()}
+              poll_s: float = 0.002):
+        """Removed v1 surface (was a deprecation shim until PR 5)."""
+        raise RuntimeError(
+            "ContinuousBatchingEngine.serve() was removed; use run() — "
+            "it returns {req_id: RequestOutput} (RequestOutput.tokens "
+            "is the old bare array)")
 
     def generate(self, prompts, max_new_tokens: int = 16,
                  sampling: Optional[SamplingParams] = None) -> np.ndarray:

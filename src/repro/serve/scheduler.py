@@ -11,9 +11,8 @@ The queue is thread-safe so a driver thread can keep submitting while
 the engine loop drains (the single-process analogue of the paper's
 socket-connected applications).
 
-``Request`` is the v1 name, kept as a thin deprecated shim over
-``GenerationRequest`` (same fields, same positional order; ``sampling``
-defaults to greedy).
+The v1 ``Request`` shim is GONE (callers migrated in PR 4/5):
+constructing it raises with a pointer at ``GenerationRequest``.
 """
 from __future__ import annotations
 
@@ -21,31 +20,23 @@ import heapq
 import itertools
 import random
 import threading
-import warnings
 from typing import Iterable, Optional
 
 from repro.serve.api import GenerationRequest
 
-_REQUEST_DEPRECATION_WARNED = False
 
+class Request:
+    """Removed v1 request type (was a deprecation shim until PR 5).
 
-class Request(GenerationRequest):
-    """Deprecated v1 alias of ``serve.api.GenerationRequest``.
-
-    Identical fields and behaviour (``sampling`` defaults to greedy
-    temperature-0.0); new code should construct ``GenerationRequest``
-    directly.  Warns once per process.
+    Kept importable so stale callers fail with an actionable error
+    instead of an ImportError far from the fix.
     """
 
-    def __post_init__(self):
-        global _REQUEST_DEPRECATION_WARNED
-        if not _REQUEST_DEPRECATION_WARNED:
-            _REQUEST_DEPRECATION_WARNED = True
-            warnings.warn(
-                "serve.Request is deprecated; use serve.GenerationRequest "
-                "(with serve.SamplingParams) instead",
-                DeprecationWarning, stacklevel=3)
-        super().__post_init__()
+    def __init__(self, *args, **kwargs):
+        raise TypeError(
+            "serve.Request was removed; construct "
+            "serve.GenerationRequest(prompt, max_new_tokens=..., "
+            "sampling=SamplingParams(...)) instead")
 
 
 class RequestQueue:

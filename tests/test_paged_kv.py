@@ -14,7 +14,13 @@ from repro.core.binary import shape_key
 from repro.core.function import FunctionRegistry
 from repro.core.runtime import XarTrekRuntime
 from repro.serve import (BlockPool, ContinuousBatchingEngine,
-                         PagedSlotManager, Request, ServeEngine, SlotManager)
+                         GenerationRequest, PagedSlotManager, ServeEngine,
+                         SlotManager)
+
+def _serve(engine, reqs=()):
+    """v2 run() flattened to the old {req_id: token-array} shape."""
+    return {rid: out.tokens for rid, out in engine.run(reqs).items()}
+
 
 
 @pytest.fixture(scope="module")
@@ -55,12 +61,12 @@ def test_paged_mixed_lengths_match_dense(cfg, sync_engine):
     """Ragged arrivals (mixed prompt/gen lengths) through paged and dense
     engines produce the same per-request tokens."""
     rng2 = np.random.RandomState(7)
-    reqs_a = [Request(rng2.randint(0, cfg.vocab_size,
+    reqs_a = [GenerationRequest(rng2.randint(0, cfg.vocab_size,
                                    size=int(rng2.randint(3, 20))),
                       max_new_tokens=int(rng2.randint(1, 8)),
                       arrival_s=0.004 * i) for i in range(6)]
     rng2 = np.random.RandomState(7)
-    reqs_b = [Request(rng2.randint(0, cfg.vocab_size,
+    reqs_b = [GenerationRequest(rng2.randint(0, cfg.vocab_size,
                                    size=int(rng2.randint(3, 20))),
                       max_new_tokens=int(rng2.randint(1, 8)),
                       arrival_s=0.004 * i) for i in range(6)]
@@ -69,8 +75,8 @@ def test_paged_mixed_lengths_match_dense(cfg, sync_engine):
     paged = ContinuousBatchingEngine(cfg, max_slots=3, max_seq=64,
                                      params=sync_engine.params,
                                      paged=True, block_size=16)
-    out_a = dense.serve(reqs_a)
-    out_b = paged.serve(reqs_b)
+    out_a = _serve(dense, reqs_a)
+    out_b = _serve(paged, reqs_b)
     for ra, rb in zip(reqs_a, reqs_b):
         np.testing.assert_array_equal(out_a[ra.req_id], out_b[rb.req_id])
 
@@ -95,12 +101,12 @@ def test_block_exhaustion_backpressure_gates_admission(cfg, sync_engine):
     rng = np.random.RandomState(11)
     # each request: 2 prompt blocks + 1 growth block = 3 of the 6-block
     # pool; admission watermark lets exactly two run concurrently
-    reqs = [Request(rng.randint(0, cfg.vocab_size, size=16),
+    reqs = [GenerationRequest(rng.randint(0, cfg.vocab_size, size=16),
                     max_new_tokens=8) for _ in range(4)]
     eng = ContinuousBatchingEngine(cfg, max_slots=4, max_seq=32,
                                    params=sync_engine.params,
                                    paged=True, block_size=8, num_blocks=6)
-    out = eng.serve(reqs)
+    out = _serve(eng, reqs)
     assert sorted(out) == sorted(r.req_id for r in reqs)
     st = eng.slots.stats
     assert st["admitted"] == 4 and st["released"] == 4
@@ -126,12 +132,12 @@ def test_block_freelist_reuse_under_churn(cfg, sync_engine):
     """Sequential waves through a small pool recycle the same physical
     blocks; the pool drains back to empty."""
     rng = np.random.RandomState(13)
-    reqs = [Request(rng.randint(0, cfg.vocab_size, size=8),
+    reqs = [GenerationRequest(rng.randint(0, cfg.vocab_size, size=8),
                     max_new_tokens=4) for _ in range(6)]
     eng = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=32,
                                    params=sync_engine.params,
                                    paged=True, block_size=8, num_blocks=4)
-    out = eng.serve(reqs)
+    out = _serve(eng, reqs)
     assert len(out) == 6
     pst = eng.slots.pool.stats
     assert pst["allocated"] == pst["freed"]
@@ -148,13 +154,13 @@ def test_preemption_resumes_byte_identical(cfg, sync_engine):
     p2 = rng.randint(0, cfg.vocab_size, size=4)
     dense = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=24,
                                      params=sync_engine.params)
-    da, db = Request(p1, 12), Request(p2, 12)
-    want = dense.serve([da, db])
+    da, db = GenerationRequest(p1, 12), GenerationRequest(p2, 12)
+    want = _serve(dense, [da, db])
     small = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=24,
                                      params=sync_engine.params,
                                      paged=True, block_size=4, num_blocks=6)
-    ra, rb = Request(p1, 12), Request(p2, 12)
-    got = small.serve([ra, rb])
+    ra, rb = GenerationRequest(p1, 12), GenerationRequest(p2, 12)
+    got = _serve(small, [ra, rb])
     assert small.slots.stats["preempted"] >= 1
     np.testing.assert_array_equal(want[da.req_id], got[ra.req_id])
     np.testing.assert_array_equal(want[db.req_id], got[rb.req_id])
@@ -173,9 +179,9 @@ def test_paged_admits_more_concurrent_at_equal_memory(cfg, sync_engine):
                                      params=sync_engine.params,
                                      paged=True, block_size=16,
                                      num_blocks=9)   # 9*16 = 144 = 3*48
-    dense.serve([Request(rng.randint(0, cfg.vocab_size, size=4),
+    _serve(dense, [GenerationRequest(rng.randint(0, cfg.vocab_size, size=4),
                          max_new_tokens=4) for _ in range(6)])
-    paged.serve([Request(rng.randint(0, cfg.vocab_size, size=4),
+    _serve(paged, [GenerationRequest(rng.randint(0, cfg.vocab_size, size=4),
                          max_new_tokens=4) for _ in range(6)])
     assert dense.slots.stats["peak_active"] == 3
     assert paged.slots.stats["peak_active"] == 6
@@ -185,7 +191,7 @@ def test_paged_admits_more_concurrent_at_equal_memory(cfg, sync_engine):
 # -------------------------------------------------- fragmentation stats
 
 def test_fragmentation_accounting_dense_vs_paged():
-    req = Request(np.arange(1, 5, dtype=np.int32), max_new_tokens=4)
+    req = GenerationRequest(np.arange(1, 5, dtype=np.int32), max_new_tokens=4)
     dense = SlotManager(max_slots=2, max_seq=64)
     dense.admit(dataclasses.replace(req), first_token=7)
     dst = dense.stats
@@ -207,10 +213,10 @@ def test_paged_manager_without_max_seq_is_pool_bound():
     m = PagedSlotManager(max_slots=2, block_size=8, num_blocks=4,
                          max_seq=None)
     assert m.table_width == 4
-    m.validate(Request(np.arange(1, 9, dtype=np.int32),
+    m.validate(GenerationRequest(np.arange(1, 9, dtype=np.int32),
                        max_new_tokens=24))      # 32 positions = whole pool
     with pytest.raises(ValueError, match="blocks"):
-        m.validate(Request(np.arange(1, 9, dtype=np.int32),
+        m.validate(GenerationRequest(np.arange(1, 9, dtype=np.int32),
                            max_new_tokens=25))
 
 
@@ -220,13 +226,13 @@ def test_stop_token_ends_generation_early(cfg, sync_engine):
     prompt = np.arange(1, 6, dtype=np.int32)
     base = ContinuousBatchingEngine(cfg, max_slots=1, max_seq=32,
                                     params=sync_engine.params)
-    full = list(base.serve([Request(prompt, 6)]).values())[0].tolist()
+    full = list(_serve(base, [GenerationRequest(prompt, 6)]).values())[0].tolist()
     stop = full[1]
     expect_len = full.index(stop) + 1
     eng = ContinuousBatchingEngine(cfg, max_slots=1, max_seq=32,
                                    params=sync_engine.params,
                                    paged=True, block_size=8)
-    out = list(eng.serve([Request(prompt, 6,
+    out = list(_serve(eng, [GenerationRequest(prompt, 6,
                                   stop_tokens=(stop,))]).values())[0]
     assert out.tolist() == full[:expect_len]    # stop token included
     assert len(out) < len(full)
@@ -240,15 +246,15 @@ def test_early_stop_releases_capacity_to_queued_arrivals(cfg, sync_engine):
     ref = ContinuousBatchingEngine(cfg, max_slots=1, max_seq=32,
                                    params=sync_engine.params,
                                    paged=True, block_size=8)
-    out_ref = ref.serve([Request(pa, 6), Request(pb, 6)])
+    out_ref = _serve(ref, [GenerationRequest(pa, 6), GenerationRequest(pb, 6)])
     a_toks = [v for k, v in sorted(out_ref.items())][0].tolist()
     stop = a_toks[1]
     eng = ContinuousBatchingEngine(cfg, max_slots=1, max_seq=32,
                                    params=sync_engine.params,
                                    paged=True, block_size=8)
-    ra = Request(pa, 6, stop_tokens=(stop,))
-    rb = Request(pb, 6)
-    out = eng.serve([ra, rb])
+    ra = GenerationRequest(pa, 6, stop_tokens=(stop,))
+    rb = GenerationRequest(pb, 6)
+    out = _serve(eng, [ra, rb])
     assert len(out) == 2
     assert len(out[ra.req_id]) < 6
     np.testing.assert_array_equal(out[rb.req_id],
@@ -271,9 +277,9 @@ def test_paged_decode_static_signature_no_bucket_misses(cfg, sync_engine):
                                    params=sync_engine.params, runtime=rt,
                                    fn_prefix="pgd", paged=True, block_size=8)
     rng = np.random.RandomState(17)
-    reqs = [Request(rng.randint(0, cfg.vocab_size, size=6),
+    reqs = [GenerationRequest(rng.randint(0, cfg.vocab_size, size=6),
                     max_new_tokens=3) for _ in range(4)]
-    out = eng.serve(reqs)
+    out = _serve(eng, reqs)
     assert len(out) == 4
     decode_calls = [r for r in rt.call_log if r["fn"] == "pgd_decode"]
     assert decode_calls

@@ -2,7 +2,7 @@
 streaming handles, abort, in-graph per-request sampling determinism
 (HOST vs ACCEL, forced mid-stream migration, preempt/resume), the
 single static decode compile signature, the lane-aligned paged pool,
-and the v1 deprecation shims."""
+and the removed v1 surface."""
 import dataclasses
 import threading
 
@@ -312,7 +312,7 @@ def test_abort_preempted_request_finishes_aborted(cfg, sync_engine):
         if eng._resume and "aborted" not in state:
             rid = next(iter(eng._resume))
             state["aborted"] = rid
-            state["stash_len"] = len(eng._resume[rid])
+            state["stash_len"] = len(eng._resume[rid][0])
             assert eng.abort(rid)
 
     small.on_step = on_step
@@ -389,29 +389,99 @@ def test_lane_align_default_off_in_interpret_mode(cfg, sync_engine):
 
 # ------------------------------------------------------ deprecation shims
 
-def test_v1_request_and_serve_shims_warn_once(cfg, sync_engine):
-    import repro.serve.engine as engine_mod
-    import repro.serve.scheduler as sched_mod
+def test_v1_request_and_serve_are_removed(cfg, sync_engine):
+    """The v1 shims are gone: both fail fast with a pointer at the v2
+    replacement (not an ImportError far from the fix)."""
     from repro.serve.scheduler import Request
 
-    sched_mod._REQUEST_DEPRECATION_WARNED = False
-    engine_mod._SERVE_DEPRECATION_WARNED = False
-    with pytest.warns(DeprecationWarning, match="GenerationRequest"):
-        req = Request(np.arange(1, 6, dtype=np.int32), 2)
-    assert isinstance(req, GenerationRequest)     # full v2 request
-    assert req.sampling.greedy
+    with pytest.raises(TypeError, match="GenerationRequest"):
+        Request(np.arange(1, 6, dtype=np.int32), 2)
 
     cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
                                   params=sync_engine.params)
-    with pytest.warns(DeprecationWarning, match="run\\(\\)"):
-        out = cb.serve([req])
-    # old contract intact: bare (n,) int32 arrays keyed by req_id
-    assert isinstance(out[req.req_id], np.ndarray)
-    assert out[req.req_id].shape == (2,)
+    with pytest.raises(RuntimeError, match="run\\(\\)"):
+        cb.serve([GenerationRequest(np.arange(1, 6, dtype=np.int32), 2)])
+    # the engine stays usable after the failed call
+    out = cb.run([GenerationRequest(np.arange(1, 6, dtype=np.int32), 2)])
+    assert all(o.tokens.shape == (2,) for o in out.values())
 
-    # one warning per process: a second use is silent
-    import warnings as warnings_mod
-    with warnings_mod.catch_warnings():
-        warnings_mod.simplefilter("error", DeprecationWarning)
-        req2 = Request(np.arange(1, 6, dtype=np.int32), 1)
-        cb.serve([req2])
+
+# --------------------------------------------------------- logprobs opt-in
+
+def test_logprobs_opt_in_surfaced_and_aligned(cfg, sync_engine):
+    """SamplingParams(logprobs=True) returns per-token chosen-token
+    logprobs aligned with tokens (greedy and sampled); without the
+    opt-in the field is None — and enabling it changes neither the
+    tokens nor the compile signature (same engine, same run)."""
+    cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
+                                  params=sync_engine.params)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    plain = GenerationRequest(prompt, 5)
+    withlp = GenerationRequest(prompt, 5,
+                               sampling=SamplingParams(logprobs=True))
+    sampled = GenerationRequest(prompt, 5,
+                                sampling=SamplingParams(
+                                    temperature=0.8, top_k=40, seed=7,
+                                    logprobs=True))
+    out = cb.run([plain, withlp, sampled])
+    assert out[plain.req_id].logprobs is None
+    for r in (withlp, sampled):
+        o = out[r.req_id]
+        assert o.logprobs is not None
+        assert o.logprobs.shape == o.tokens.shape
+        assert o.logprobs.dtype == np.float32
+        assert (o.logprobs <= 0).all() and np.isfinite(o.logprobs).all()
+    # logprobs opt-in never moves tokens (greedy == greedy)
+    np.testing.assert_array_equal(out[plain.req_id].tokens,
+                                  out[withlp.req_id].tokens)
+    # greedy logprob is the argmax token's raw log-softmax mass: the
+    # most likely token, so each step's logprob is the row maximum —
+    # spot-check the first one against a direct forward pass
+    logits, _ = jax.jit(sync_engine.model.prefill)(
+        sync_engine.params, {"tokens": jnp.asarray(prompt)[None, :]})
+    ref = jax.nn.log_softmax(logits[0, -1].astype(jnp.float32))
+    tok0 = out[withlp.req_id].tokens[0]
+    np.testing.assert_allclose(out[withlp.req_id].logprobs[0],
+                               np.asarray(ref)[tok0], rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_logprobs_identical_across_backends_and_preemption(cfg,
+                                                           sync_engine):
+    """Chosen-token logprobs are part of the determinism contract:
+    byte-comparable HOST vs ACCEL, and preserved across a forced
+    preempt/resume (the stash replays logprobs with the tokens)."""
+    rng = np.random.RandomState(3)
+    p1 = rng.randint(0, cfg.vocab_size, size=4)
+    p2 = rng.randint(0, cfg.vocab_size, size=4)
+    sp = SamplingParams(temperature=0.9, top_k=0, seed=11, logprobs=True)
+
+    def serve(policy_kw, paged_kw):
+        eng = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=24,
+                                       params=sync_engine.params,
+                                       **policy_kw, **paged_kw)
+        reqs = [GenerationRequest(p1, 12, sampling=sp),
+                GenerationRequest(p2, 12, sampling=sp)]
+        out = eng.run(reqs)
+        return [out[r.req_id] for r in reqs], eng
+
+    from repro.core.policy import PinAccel, PinHost
+    host, _ = serve({"policy": PinHost()}, {})
+    accel, _ = serve({"policy": PinAccel()},
+                     {"paged": True, "block_size": 4})
+    tight, eng = serve({}, {"paged": True, "block_size": 4,
+                            "num_blocks": 6})
+    assert eng.slots.stats["preempted"] >= 1, "pool never preempted"
+    for a, b in zip(host, accel):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_allclose(a.logprobs, b.logprobs,
+                                   rtol=2e-5, atol=2e-5)
+    for a, b in zip(host, tight):
+        # tokens are exactly preemption-invariant; logprob VALUES are
+        # only near-equal — resume rebuilds the KV via a batched
+        # prefill whose float accumulation order differs from the
+        # incremental decode path (argmax/Gumbel comparisons absorb
+        # those last-bit differences, log-masses show them)
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_allclose(a.logprobs, b.logprobs,
+                                   rtol=5e-3, atol=5e-3)

@@ -13,8 +13,14 @@ from repro.configs import ARCHS, reduced
 from repro.core.function import FunctionRegistry
 from repro.core.runtime import XarTrekRuntime
 from repro.core.targets import TargetKind
-from repro.serve import (ContinuousBatchingEngine, Request, RequestQueue,
-                         ServeEngine, poisson_arrivals, prompt_bucket)
+from repro.serve import (ContinuousBatchingEngine, GenerationRequest,
+                         RequestQueue, ServeEngine, poisson_arrivals,
+                         prompt_bucket)
+
+def _serve(engine, reqs=()):
+    """v2 run() flattened to the old {req_id: token-array} shape."""
+    return {rid: out.tokens for rid, out in engine.run(reqs).items()}
+
 
 
 @pytest.fixture(scope="module")
@@ -62,9 +68,9 @@ def test_slot_reuse_after_eviction(cfg, sync_engine):
     rng = np.random.RandomState(1)
     cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
                                   params=sync_engine.params)
-    reqs = [Request(rng.randint(0, cfg.vocab_size, size=8),
+    reqs = [GenerationRequest(rng.randint(0, cfg.vocab_size, size=8),
                     max_new_tokens=n) for n in (3, 1, 4, 2, 3)]
-    out = cb.serve(reqs)
+    out = _serve(cb, reqs)
     assert sorted(out) == sorted(r.req_id for r in reqs)
     for r in reqs:
         assert out[r.req_id].shape == (r.max_new_tokens,)
@@ -82,7 +88,7 @@ def test_overlong_request_rejected_at_submission(cfg, sync_engine):
     with pytest.raises(ValueError, match="positions"):
         cb.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=20)
     with pytest.raises(ValueError, match="positions"):
-        cb.serve([Request(np.arange(1, 9, dtype=np.int32),
+        _serve(cb, [GenerationRequest(np.arange(1, 9, dtype=np.int32),
                           max_new_tokens=20)])
     # the engine stays usable after a rejection
     out = cb.generate(np.arange(1, 9, dtype=np.int32)[None, :],
@@ -105,9 +111,9 @@ def test_bucket_overhanging_cache_row_is_clamped(cfg, sync_engine):
 def test_serve_drains_results_per_call(cfg, sync_engine):
     cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=32,
                                   params=sync_engine.params)
-    first = cb.serve([Request(np.arange(1, 6, dtype=np.int32),
+    first = _serve(cb, [GenerationRequest(np.arange(1, 6, dtype=np.int32),
                               max_new_tokens=2)])
-    second = cb.serve([Request(np.arange(1, 6, dtype=np.int32),
+    second = _serve(cb, [GenerationRequest(np.arange(1, 6, dtype=np.int32),
                                max_new_tokens=2)])
     assert len(first) == 1 and len(second) == 1
     assert set(first) != set(second)       # no all-time accumulation
@@ -128,12 +134,12 @@ def test_ragged_arrivals_through_runtime(cfg):
     cb = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64,
                                   runtime=rt, seed=0)
     rng = np.random.RandomState(0)
-    reqs = [Request(rng.randint(0, cfg.vocab_size,
+    reqs = [GenerationRequest(rng.randint(0, cfg.vocab_size,
                                 size=int(rng.randint(4, 20))),
                     max_new_tokens=int(rng.randint(1, 6)),
                     arrival_s=0.005 * i)
             for i in range(6)]
-    out = cb.serve(reqs)
+    out = _serve(cb, reqs)
     assert len(out) == len(reqs)
     assert rt.call_log, "no step went through the runtime"
     # every executed target is a declared variant of the called function
@@ -167,7 +173,7 @@ def test_prefill_shape_buckets_cached(cfg, sync_engine):
     rng = np.random.RandomState(2)
     for S in (4, 12, 20, 12, 4):         # buckets 8, 16, 32, 16, 8
         cb.submit(rng.randint(0, cfg.vocab_size, size=S), max_new_tokens=1)
-    cb.serve()
+    _serve(cb)
     stats = rt.binaries["cb_prefill"].shape_stats
     # bucket 8 matches the prepare()-time default; 16 and 32 are bucket
     # compiles, re-used on repeat
@@ -243,9 +249,9 @@ def test_eager_accel_compiles_before_first_call(cfg, sync_engine):
 
 def test_request_queue_orders_by_arrival_then_fifo():
     q = RequestQueue()
-    a = Request(np.array([1]), arrival_s=0.5)
-    b = Request(np.array([2]), arrival_s=0.0)
-    c = Request(np.array([3]), arrival_s=0.0)
+    a = GenerationRequest(np.array([1]), arrival_s=0.5)
+    b = GenerationRequest(np.array([2]), arrival_s=0.0)
+    c = GenerationRequest(np.array([3]), arrival_s=0.0)
     for r in (a, b, c):
         q.submit(r)
     assert q.pop_arrived(now=0.1) is b         # earliest arrival wins
