@@ -37,7 +37,15 @@ budgets) served three ways on the same model and weights:
     SamplingParams (temperature 0.8, top-k 40, per-request seeds)
     through the in-graph sampler, reporting tok/s plus per-request
     TTFT/TPOT/queue-wait percentiles from the v2 RequestOutput metrics
-    (floor.json holds a tok/s floor AND a ttft_p50_s ceiling).
+    (floor.json holds a tok/s floor AND a ttft_p50_s ceiling);
+  * prefix-cache serving (``--prefix-zipf N`` sizes it; defaults to
+    ``--n-requests``) — a Zipf-popular shared-prefix stream (K distinct
+    two-block system prompts, short unique suffixes) served cache-off
+    and cache-on at EQUAL KV memory: the cache-on engine must compute
+    STRICTLY fewer prefill tokens (asserted) and the artifact reports
+    the prefix hit rate, admitted concurrency and TTFT percentiles
+    (``floor.json`` bounds ``prefix_hit_rate`` from below and
+    ``prefix_ttft_p50_s`` from above).
 
 Emits ``serve_cb/*`` rows; derived carries tok/s for each engine, the
 continuous/synchronous throughput ratio, and the paged engine's peak
@@ -80,6 +88,10 @@ SEED = 0
 # scripted policy flips HOST -> ACCEL and back (well inside even the CI
 # smoke stream, whose longest request decodes ~15+ steps)
 MIGRATE_AT = (4, 10)
+# prefix-cache scenario: K distinct shared prefixes spanning this many
+# full KV blocks each (the "same system prompt" multi-tenant shape)
+N_PREFIXES = 4
+PREFIX_BLOCKS = 2
 
 
 class FlipSchedule:
@@ -117,6 +129,25 @@ def make_requests(vocab: int, n: int, rate: float, seed: int = SEED,
         sampling=(SamplingParams(temperature=0.8, top_k=40, seed=1000 + i)
                   if sampling else SamplingParams()))
             for i, t in enumerate(arrivals)]
+
+
+def make_prefix_requests(vocab: int, n: int, rate: float,
+                         seed: int = SEED) -> list[GenerationRequest]:
+    """Zipf-popular shared prefixes: ``N_PREFIXES`` distinct two-block
+    (64-token) prefixes with popularity ~ 1/rank, each request
+    appending a short unique suffix — the multi-tenant shared
+    system-prompt stream the prefix cache exists for."""
+    rng = np.random.RandomState(seed + 17)
+    plen = PREFIX_BLOCKS * BLOCK_SIZE
+    prefixes = [rng.randint(0, vocab, size=plen)
+                for _ in range(N_PREFIXES)]
+    weights = 1.0 / np.arange(1.0, N_PREFIXES + 1)
+    weights /= weights.sum()
+    return [GenerationRequest(
+        np.concatenate([prefixes[rng.choice(N_PREFIXES, p=weights)],
+                        rng.randint(0, vocab, size=int(rng.randint(4, 9)))]),
+        max_new_tokens=int(rng.randint(4, 9)), arrival_s=t)
+        for t in poisson_arrivals(n, rate, seed + 17)]
 
 
 def total_tokens(reqs: list[GenerationRequest]) -> int:
@@ -197,6 +228,9 @@ def main(argv=None) -> int:
                     help="skip the paged-engine run")
     ap.add_argument("--no-accel", action="store_true",
                     help="skip the ACCEL-backend and forced-migration runs")
+    ap.add_argument("--prefix-zipf", type=int, default=0, metavar="N",
+                    help="requests in the shared-prefix Zipf scenario "
+                         "(default: --n-requests)")
     ap.add_argument("--cluster", type=int, default=2, metavar="N",
                     help="run N engine workers behind one TCP scheduler "
                          "(0 skips; --no-accel also skips it — the "
@@ -266,6 +300,49 @@ def main(argv=None) -> int:
     t_sampled, souts = serve_continuous(sampled_engine, sreqs)
     results["sampled_cb_tok_s"] = tokens / t_sampled
     results.update(latency_percentiles(souts))
+
+    # prefix caching: the SAME Zipf shared-prefix stream served
+    # cache-off then cache-on at equal KV memory (same pool, same
+    # rows).  Warm prompts share no scenario prefix, so the measured
+    # runs start from a cold index; the cache-on engine must compute
+    # strictly fewer prefill tokens — the matched spans — or the
+    # feature is not doing its one job
+    n_prefix = args.prefix_zipf or args.n_requests
+    preqs = make_prefix_requests(cfg.vocab_size, n_prefix, args.rate,
+                                 args.seed)
+    ptokens = total_tokens(preqs)
+    pkw = dict(max_slots=2 * MAX_SLOTS, max_seq=MAX_SEQ,
+               params=sync.params, paged=True, block_size=BLOCK_SIZE,
+               num_blocks=MAX_SLOTS * MAX_SEQ // BLOCK_SIZE)
+    pfx_off = ContinuousBatchingEngine(cfg, fn_prefix="pfo", **pkw)
+    pfx_on = ContinuousBatchingEngine(cfg, fn_prefix="pfx",
+                                      prefix_cache=True, **pkw)
+    warm(pfx_off, cfg.vocab_size)
+    warm(pfx_on, cfg.vocab_size)
+    t_pfx_off, _ = serve_continuous(pfx_off, [dataclasses.replace(r)
+                                              for r in preqs])
+    t_pfx_on, pouts = serve_continuous(pfx_on, [dataclasses.replace(r)
+                                                for r in preqs])
+    on_stats, off_stats = pfx_on.prefix_stats(), pfx_off.prefix_stats()
+    assert on_stats["prefill_tokens"] < off_stats["prefill_tokens"], (
+        "prefix cache computed as many prefill tokens as cache-off",
+        on_stats, off_stats)
+    pttft = sorted(o.ttft_s for o in pouts.values())
+    results.update({
+        "prefix_n_requests": n_prefix,
+        "prefix_off_tok_s": ptokens / t_pfx_off,
+        "prefix_on_tok_s": ptokens / t_pfx_on,
+        "prefix_hit_rate": on_stats["prefix_hit_rate"],
+        "prefix_hit_tokens": on_stats["prefix_hit_tokens"],
+        "prefix_prefill_tokens_on": on_stats["prefill_tokens"],
+        "prefix_prefill_tokens_off": off_stats["prefill_tokens"],
+        "prefix_cow_forks": on_stats["cow_forks"],
+        "prefix_peak_active_on": pfx_on.slots.stats["peak_active"],
+        "prefix_peak_active_off": pfx_off.slots.stats["peak_active"],
+        "prefix_ttft_p50_s": pttft[len(pttft) // 2],
+        "prefix_ttft_p90_s": pttft[int(len(pttft) * 0.9)
+                                   if len(pttft) > 1 else 0],
+    })
 
     t_accel = t_mig = None
     if not args.no_accel:
@@ -386,6 +463,15 @@ def main(argv=None) -> int:
          f"{results['sampled_cb_tok_s']:.1f}tok/s t=0.8 k=40 "
          f"ttft_p50={results['ttft_p50_s'] * 1e3:.0f}ms "
          f"tpot_p50={results['tpot_p50_s'] * 1e3:.1f}ms")
+    emit("serve_cb/prefix", t_pfx_on * 1e6 / ptokens,
+         f"{results['prefix_on_tok_s']:.1f}tok/s "
+         f"hit_rate={results['prefix_hit_rate']:.2f} "
+         f"prefill={results['prefix_prefill_tokens_on']}"
+         f"(off={results['prefix_prefill_tokens_off']}) "
+         f"peak_slots={results['prefix_peak_active_on']}"
+         f"(off={results['prefix_peak_active_off']}) "
+         f"cow={results['prefix_cow_forks']} "
+         f"ttft_p50={results['prefix_ttft_p50_s'] * 1e3:.0f}ms")
     if t_accel is not None:
         emit("serve_cb/accel", t_accel * 1e6 / tokens,
              f"{results['accel_cb_tok_s']:.1f}tok/s pallas")

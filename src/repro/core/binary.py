@@ -30,9 +30,15 @@ def shape_key(args: tuple) -> tuple:
     block-table shape (B, table_width) alongside the cache pool and
     token leaves: a paged engine's steady-state decode signature is
     static and compiles exactly once, outside Algorithm 1's timed
-    region.  Non-array leaves (python scalars riding in a batch dict)
-    key on (type, value) — a changed static scalar must not silently
-    reuse another signature's executable."""
+    region.  The prefix-cache chunked prefill (``{prefix}_prefill_ctx``)
+    keys the same way: its ``offset``/``length`` leaves are (1,) DATA
+    vectors — match length and feed length vary per request without
+    forking the signature — so only the chunk's power-of-two token
+    bucket (and the pool/table shapes, static per engine) key the
+    compile, bounding it to O(log max_chunk) buckets exactly like the
+    plain bucketed prefill.  Non-array leaves (python scalars riding in
+    a batch dict) key on (type, value) — a changed static scalar must
+    not silently reuse another signature's executable."""
     leaves, treedef = jax.tree.flatten(args)
     return (treedef, tuple(
         (l.shape, l.dtype) if hasattr(l, "shape") else (type(l), l)

@@ -394,3 +394,62 @@ def paged_decode_attention(q, k_pages, v_pages, table, index: jax.Array,
     vc = rows_v.reshape(B, NBT * BS, *rows_v.shape[3:])
     return decode_attention(q, kc, vc, index[:, None, None, None],
                             kv_index=kv_index, k_new=k_new, v_new=v_new)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, table, offset, length,
+                            k_new, v_new,
+                            kv_index: np.ndarray | None = None,
+                            backend: str = "xla") -> jax.Array:
+    """Chunked-prefill attention: a multi-token chunk extends a prefix
+    already resident in a paged cache (prefix caching's partial prefill).
+
+    q: (B,W,Hp,hd) chunk queries at ABSOLUTE positions ``offset + j``;
+    k_pages/v_pages: (NP,BS,KV,hd) one layer of the block pool; table:
+    (B,NBT) int32 block ids; offset/length: (B,) int32.  The pool
+    contributes logical positions [0, offset) — the cached prefix,
+    written by an earlier request's prefill — and the chunk supplies
+    positions [offset, length) causally through ``k_new/v_new``
+    (B,W,KV,hd).  Chunk columns at or past ``length - offset`` are
+    bucket padding: masked for every query, like the pool's junk-block
+    columns past ``offset`` (their exp-underflowed scores are exact
+    0.0, so padding width never changes the math — the same argument
+    as the bucketed dense prefill).  Fully-masked PADDING query rows
+    come out as garbage-but-finite values; callers never read them.
+
+    There is no Pallas chunk-prefill kernel yet, so BOTH targets run
+    this XLA gather reference (identical math; decode still swaps real
+    kernels per target).
+    """
+    del backend                       # no ACCEL-specific build yet
+    B, W, Hp, hd = q.shape
+    NBT = table.shape[1]
+    BS = k_pages.shape[1]
+    rows_k = jnp.take(k_pages, table, axis=0)         # (B, NBT, BS, KV, hdp)
+    rows_v = jnp.take(v_pages, table, axis=0)
+    if rows_k.shape[-1] != hd:
+        rows_k = rows_k[..., :hd]                     # lane-aligned pool
+        rows_v = rows_v[..., :hd]
+    T = NBT * BS
+    kc = rows_k.reshape(B, T, *rows_k.shape[3:]).astype(q.dtype)
+    vc = rows_v.reshape(B, T, *rows_v.shape[3:]).astype(q.dtype)
+    if kv_index is not None:
+        kc = kc[:, :, kv_index, :]
+        vc = vc[:, :, kv_index, :]
+        k_new = k_new[:, :, kv_index, :]
+        v_new = v_new[:, :, kv_index, :]
+    k_full = jnp.concatenate([kc, k_new.astype(q.dtype)], axis=1)
+    v_full = jnp.concatenate([vc, v_new.astype(q.dtype)], axis=1)
+    scale = 1.0 / np.sqrt(hd)
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q, k_full)
+              .astype(jnp.float32) * scale)           # (B,Hp,W,T+W)
+    ctx_valid = jnp.arange(T)[None, :] < offset[:, None]        # (B,T)
+    qi = jnp.arange(W)[:, None]
+    kj = jnp.arange(W)[None, :]
+    n_real = (length - offset)[:, None, None]                   # (B,1,1)
+    self_valid = (kj <= qi)[None] & (kj[None] < n_real)         # (B,W,W)
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(ctx_valid[:, None, :], (B, W, T)), self_valid],
+        axis=-1)[:, None]                                       # (B,1,W,T+W)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v_full)

@@ -182,6 +182,46 @@ class Model:
             batch["top_p"], batch["seed"], batch["length"])
         return toks, logps, cache
 
+    def prefill_ctx_sampled(self, params, cache, batch,
+                            backend: str = "xla"
+                            ) -> tuple[jax.Array, jax.Array, dict]:
+        """Chunked prefill against a paged cache holding the feed's
+        cached prefix (prefix caching), with in-graph sampling of the
+        first generated token.
+
+        batch: {"tokens": (B, W_pad) uncached span (bucketed),
+        "offset": (B,) first uncached position, "length": (B,) total
+        feed length, "block_table": (B, NBT)} plus the (B,) sampling
+        vectors.  The chunk's last REAL token sits at column
+        ``length - offset - 1``; the sampled token's absolute position
+        is ``length`` — the SAME position convention as
+        ``prefill_at_sampled``, so a cached and an uncached admission
+        of the same request draw the identical seeded token.  Returns
+        ((B,) tokens, (B,) logprobs, chunk_cache (L, B, W, KV, hd)) —
+        the chunk KV is returned for the caller to scatter into
+        private blocks (shared prefix blocks are never written here).
+        Attention families only, like ``prefill_at``."""
+        from repro.models import sampling as sampling_lib
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe", "vlm", "audio"):
+            raise NotImplementedError(
+                f"prefill_ctx: {cfg.family} caches are "
+                "position-synchronised")
+        fwd = {k: v for k, v in batch.items()
+               if k not in sampling_lib.SAMPLING_KEYS}
+        logits, chunk_cache, _ = tf_lib.forward_prefill_paged(
+            params, fwd, cfg, self.geom, self.mesh, cache,
+            backend=backend)
+        if logits.ndim != 3:
+            raise NotImplementedError(
+                "in-graph sampling supports single-codebook logits only")
+        idx = (batch["length"] - batch["offset"]).astype(jnp.int32) - 1
+        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)
+        toks, logps = sampling_lib.sample_tokens(
+            last[:, -1, :], batch["temperature"], batch["top_k"],
+            batch["top_p"], batch["seed"], batch["length"])
+        return toks, logps, chunk_cache
+
     def decode_sampled(self, params, cache, batch, backend: str = "xla"
                        ) -> tuple[jax.Array, jax.Array, dict]:
         """``decode`` with in-graph per-request sampling fused into the

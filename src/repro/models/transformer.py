@@ -608,3 +608,60 @@ def _forward_decode_paged(params, batch, cfg, geom, mesh, cache, x, positions,
     new_cache = dict(cache, k=ck, v=cv)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return output_logits(params, x, cfg), new_cache, aux
+
+
+def forward_prefill_paged(params, batch, cfg, geom, mesh, cache,
+                          backend: str = "xla"):
+    """Chunked prefill over a paged KV cache (prefix caching).
+
+    The chunk's tokens EXTEND a prefix already resident in the block
+    pool: batch carries ``tokens`` (B, W) — the uncached span, bucketed
+    — plus ``offset`` (B,) first uncached position, ``length`` (B,)
+    total feed length, and ``block_table`` (B, NBT) whose first
+    ``offset // BS`` entries are the cached (possibly shared) blocks.
+    Each layer attends chunk queries at absolute positions
+    ``offset + j`` over pool positions [0, offset) plus the chunk
+    itself, causally (``attn_lib.paged_prefill_attention``).
+
+    The pool is READ-ONLY here and the chunk's per-layer KV is RETURNED
+    (like prefill's cache), not written: matched prefix blocks are
+    shared across slots and must not be mutated, so the engine scatters
+    the returned chunk KV into the slot's private blocks explicitly.
+    Returns (logits (B, W, V), chunk_cache {"k","v"} (L, B, W, KV, hd),
+    aux).  With ``offset == 0`` (no cache hit) this degenerates to the
+    bucketed dense prefill bit-for-bit: every pool column is masked
+    (exact-zero softmax terms), and positions/causality match.
+    """
+    x = embed_inputs(params, batch, cfg)
+    B, W = x.shape[0], x.shape[1]
+    offset = batch["offset"].astype(jnp.int32)         # (B,)
+    length = batch["length"].astype(jnp.int32)         # (B,)
+    table = batch["block_table"]                       # (B, NBT)
+    positions = offset[:, None] + jnp.arange(W)[None, :]
+    kv_idx = kv_index_for(cfg, geom)
+
+    def body(x_aux, xs):
+        x, aux = x_aux
+        lp, kcp, vcp = xs
+        xn = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = qkv_project(xn, lp, cfg, geom, positions)
+        out = attn_lib.paged_prefill_attention(
+            q, kcp, vcp, table, offset, length, k_new=k, v_new=v,
+            kv_index=kv_idx, backend=backend)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
+        if cfg.family == "moe":
+            h, a = moe_block(rmsnorm(x, lp["ln2"], cfg.norm_eps), lp,
+                             cfg, mesh)
+        else:
+            h = dense_mlp_block(rmsnorm(x, lp["ln2"], cfg.norm_eps), lp, cfg)
+            a = jnp.zeros((), jnp.float32)
+        return (x + h, aux + a), (k, v)
+
+    (x, aux), kvs = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], cache["k"], cache["v"]))
+    k_all, v_all = kvs                                  # (L, B, W, KV, hd)
+    cdt = jnp.dtype(cfg.kv_cache_dtype)
+    chunk_cache = {"k": k_all.astype(cdt), "v": v_all.astype(cdt)}
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return output_logits(params, x, cfg), chunk_cache, aux

@@ -28,12 +28,31 @@ writes land in block 0 and can never corrupt a live request's blocks.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 
 import numpy as np
 
 from repro.serve.api import GenerationRequest
+
+
+def chain_hashes(tokens, block_size: int) -> list[int]:
+    """Content hash chain over the FULL blocks of a token sequence.
+
+    ``out[j] = hash((out[j-1], tuple(tokens[j*bs:(j+1)*bs])))`` — block j's
+    key commits to every token before it, so two sequences share block j's
+    hash iff they agree on the whole prefix ``[0, (j+1)*bs)``.  Only full
+    blocks are keyed: a partial tail block is private by construction
+    (its content is still growing).  This is the prefix-cache index key
+    (vLLM-style hash-chain block keying)."""
+    out: list[int] = []
+    h = None
+    for j in range(len(tokens) // block_size):
+        blk = tuple(int(t) for t in tokens[j * block_size:(j + 1) * block_size])
+        h = hash((h, blk))
+        out.append(h)
+    return out
 
 
 @dataclasses.dataclass
@@ -55,6 +74,10 @@ class Slot:
     tokens: list[int] = dataclasses.field(default_factory=list)
     logprobs: list[float] = dataclasses.field(default_factory=list)
     blocks: list[int] = dataclasses.field(default_factory=list)  # paged only
+    # hash-chain keys of this slot's FULL blocks that are registered in
+    # the pool's prefix index (paged + prefix_cache only); always a
+    # prefix of ``blocks`` — the partial tail block is never keyed
+    block_hashes: list[int] = dataclasses.field(default_factory=list)
     seq: int = 0               # admission order (preemption picks youngest)
     t_admit: float = 0.0       # when this occupancy was admitted
     t_last_token: float = 0.0  # when its latest token was sampled
@@ -186,12 +209,22 @@ class SlotManager:
 # ------------------------------------------------------------ paged layout
 
 class BlockPool:
-    """Free-list of fixed-size KV blocks.
+    """Reference-counted free-list of fixed-size KV blocks.
 
     Manages physical block ids ``1..num_blocks``; id 0 is the reserved
     junk block (inactive decode rows write there — never allocated, never
     read).  The backing cache array therefore has ``num_blocks + 1``
     physical blocks; ``num_blocks * block_size`` is the usable capacity.
+
+    Every allocated block carries a refcount: ``alloc`` hands out blocks
+    at refcount 1, ``ref`` adds a holder (prefix sharing), and ``free``
+    drops one reference per listed block.  A block whose refcount hits 0
+    returns to the free list UNLESS it is registered in the content-hash
+    index — then it parks in the CACHED set: its KV stays resident and a
+    later ``match`` on its hash revives it for free, but it is evictable
+    (LRU, least-recently-cached first) whenever ``alloc`` outruns the
+    free list.  ``free_blocks()`` therefore counts free + cached: cached
+    blocks are allocatable capacity, just lazily reclaimed.
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -200,27 +233,140 @@ class BlockPool:
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: list[int] = list(range(1, num_blocks + 1))[::-1]
-        self.stats = {"allocated": 0, "freed": 0, "peak_in_use": 0}
+        self.refcount: dict[int, int] = {}
+        self._hash_of: dict[int, int] = {}   # block id -> chain hash
+        self._by_hash: dict[int, int] = {}   # chain hash -> block id
+        self._cached: collections.OrderedDict[int, None] = \
+            collections.OrderedDict()        # refcount-0 registered, LRU order
+        self.stats = {"allocated": 0, "freed": 0, "peak_in_use": 0,
+                      "cache_hits": 0, "evicted": 0}
 
     def free_blocks(self) -> int:
-        return len(self._free)
+        """Allocatable blocks: the free list plus refcount-0 cached
+        blocks (their KV is kept opportunistically; eviction is free)."""
+        return len(self._free) + len(self._cached)
 
     def blocks_in_use(self) -> int:
-        return self.num_blocks - len(self._free)
+        """Referenced (refcount >= 1) blocks — PHYSICAL, i.e. a block
+        shared by N slots counts once."""
+        return self.num_blocks - self.free_blocks()
+
+    def cached_blocks(self) -> int:
+        return len(self._cached)
+
+    def is_cached(self, block: int) -> bool:
+        """True for a refcount-0 block parked in the cached set (a match
+        would revive it — consuming allocatable capacity — rather than
+        share a live block for free)."""
+        return block in self._cached
 
     def alloc(self, n: int = 1) -> list[int]:
-        if n > len(self._free):
+        if n > self.free_blocks():
             raise RuntimeError(
-                f"block pool exhausted: need {n}, have {len(self._free)}")
-        out = [self._free.pop() for _ in range(n)]
+                f"block pool exhausted: need {n}, have {self.free_blocks()}")
+        out = []
+        for _ in range(n):
+            if self._free:
+                b = self._free.pop()
+            else:
+                # evict the least-recently-cached block: drop its hash
+                # (its KV is about to be overwritten by the new owner)
+                b, _ = self._cached.popitem(last=False)
+                self._unregister(b)
+                self.stats["evicted"] += 1
+            self.refcount[b] = 1
+            out.append(b)
         self.stats["allocated"] += n
         self.stats["peak_in_use"] = max(self.stats["peak_in_use"],
                                         self.blocks_in_use())
         return out
 
     def free(self, blocks: list[int]) -> None:
-        self._free.extend(blocks)
-        self.stats["freed"] += len(blocks)
+        """Drop ONE reference per listed block.  A block reaching
+        refcount 0 returns to the free list, or to the cached set when
+        its content hash is registered (prefix cache keeps the KV warm).
+        Raises ValueError on the reserved junk block 0, out-of-range
+        ids, and double-frees — silent acceptance of those used to
+        corrupt the free list (the same id handed to two slots)."""
+        freed = 0
+        for b in blocks:
+            b = int(b)
+            if b == 0:
+                raise ValueError("cannot free the reserved junk block 0")
+            if not 1 <= b <= self.num_blocks:
+                raise ValueError(
+                    f"block id {b} out of range 1..{self.num_blocks}")
+            if self.refcount.get(b, 0) < 1:
+                raise ValueError(f"double free of block {b} "
+                                 "(refcount already 0)")
+            self.refcount[b] -= 1
+            if self.refcount[b] == 0:
+                del self.refcount[b]
+                freed += 1
+                if b in self._hash_of:
+                    self._cached[b] = None     # newest at the MRU end
+                else:
+                    self._free.append(b)
+        self.stats["freed"] += freed
+
+    def ref(self, block: int) -> None:
+        """Add a holder to an allocated block (prefix sharing)."""
+        if self.refcount.get(block, 0) < 1:
+            raise ValueError(f"block {block} is not allocated")
+        self.refcount[block] += 1
+
+    # --------------------------------------------------- prefix hash index
+    def lookup(self, h: int) -> int | None:
+        """Block registered under hash ``h`` (live or cached), or None."""
+        return self._by_hash.get(h)
+
+    def match(self, h: int) -> int | None:
+        """Claim a reference on the block registered under ``h``: a live
+        shared block gains a holder, a cached one is revived (counted as
+        an allocation — it leaves allocatable capacity).  None on miss."""
+        b = self._by_hash.get(h)
+        if b is None:
+            return None
+        if b in self._cached:
+            del self._cached[b]
+            self.refcount[b] = 1
+            self.stats["allocated"] += 1
+            self.stats["peak_in_use"] = max(self.stats["peak_in_use"],
+                                            self.blocks_in_use())
+        else:
+            self.refcount[b] += 1
+        self.stats["cache_hits"] += 1
+        return b
+
+    def is_registered(self, block: int) -> bool:
+        return block in self._hash_of
+
+    def register(self, block: int, h: int) -> bool:
+        """Key ``block`` under chain hash ``h``.  First writer wins: if
+        ``h`` is already taken (two requests with the same prefix filled
+        private blocks concurrently) or the block already has a hash,
+        this is a no-op returning False — the duplicate block stays
+        unregistered and is reclaimed normally when freed."""
+        if h in self._by_hash or block in self._hash_of:
+            return False
+        self._hash_of[block] = h
+        self._by_hash[h] = block
+        return True
+
+    def unregister(self, block: int) -> None:
+        """Drop a block's hash-index entry (sole-owner in-place rewrite:
+        the content is about to change, so the key would be stale).  An
+        unregistered cached block is unreachable, so it goes straight
+        back to the free list."""
+        self._unregister(block)
+        if block in self._cached:
+            del self._cached[block]
+            self._free.append(block)
+
+    def _unregister(self, block: int) -> None:
+        h = self._hash_of.pop(block, None)
+        if h is not None:
+            self._by_hash.pop(h, None)
 
 
 class PagedSlotManager(SlotManager):
@@ -230,21 +376,32 @@ class PagedSlotManager(SlotManager):
     can reach, ``table_width * block_size`` positions); pass ``None`` to
     let a single request grow to the whole pool.  Admission and growth
     are pool-level: a request is admitted when its PROMPT blocks (plus a
-    one-block watermark so in-flight slots can still grow) are free, and
-    decode allocates one block at a time on demand — the engine preempts
-    the youngest slot if the pool runs dry mid-decode.
+    one-block growth watermark so in-flight slots can still grow) are
+    free, and decode allocates one block at a time on demand — the
+    engine preempts the youngest slot if the pool runs dry mid-decode.
+
+    With ``prefix_cache=True``, admission first matches the prompt's
+    full-block prefix against the pool's hash-chain index
+    (``chain_hashes``): matched blocks are SHARED (refcounted) across
+    slots, only the uncached tail is allocated, and the engine skips
+    re-prefill of the matched span.  Shared blocks are immutable to
+    their sharers — any write is gated by ``ensure_writable`` which
+    forks the block copy-on-write first.
     """
 
     def __init__(self, max_slots: int, block_size: int, num_blocks: int,
-                 max_seq: int | None = None):
+                 max_seq: int | None = None, prefix_cache: bool = False):
         self.pool = BlockPool(num_blocks, block_size)
         self.block_size = block_size
+        self.prefix_cache = prefix_cache
         if max_seq is None:
             self.table_width = num_blocks
         else:
             self.table_width = -(-max_seq // block_size)
         super().__init__(max_slots, self.table_width * block_size)
         self._stats["preempted"] = 0
+        self._stats["cow_forks"] = 0
+        self._stats["prefix_block_hits"] = 0
 
     def blocks_for(self, n_positions: int) -> int:
         return -(-n_positions // self.block_size)
@@ -252,11 +409,26 @@ class PagedSlotManager(SlotManager):
     def fragmentation(self) -> dict:
         """Internal fragmentation only: held blocks vs. written positions.
         (There is no external fragmentation — any free block serves any
-        slot, tables need not be physically contiguous.)"""
-        reserved = self.pool.blocks_in_use() * self.block_size
+        slot, tables need not be physically contiguous.)
+
+        Blocks are counted PHYSICALLY (deduped): a block shared by N
+        slots contributes block_size positions once to
+        ``reserved_positions``, and its extra N-1 logical appearances
+        are reported as ``shared_positions`` — the naive per-slot sum
+        used to double-count them once prefix sharing landed.  Slot
+        positions (``used_positions``) stay logical, so
+        ``frag_positions = reserved + shared - used`` remains the true
+        held-but-unwritten gap and degenerates to the old
+        ``reserved - used`` when nothing is shared."""
+        physical = self.pool.blocks_in_use()
+        logical = sum(len(s.blocks) for s in self.active.values())
+        reserved = physical * self.block_size
+        shared = (logical - physical) * self.block_size
         used = sum(s.pos for s in self.active.values())
         return {"reserved_positions": reserved, "used_positions": used,
-                "frag_positions": reserved - used}
+                "shared_positions": shared,
+                "frag_positions": reserved + shared - used,
+                "cached_blocks": self.pool.cached_blocks()}
 
     def validate(self, request: GenerationRequest) -> GenerationRequest:
         """Pool-level bound: the request's worst-case block count must fit
@@ -271,14 +443,44 @@ class PagedSlotManager(SlotManager):
                 f"/ {self.block_size}), pool+table allow {limit}")
         return request
 
-    def can_admit(self, prefill_len: int, request: GenerationRequest) -> bool:
-        """Block-exhaustion backpressure: admit when the prefill's blocks
-        plus a one-block growth watermark are free.  Capped at the
-        request's worst-case total so a pool-sized request is still
-        admissible on an idle pool (no livelock)."""
-        need = min(self.blocks_for(prefill_len) + 1,
-                   self.blocks_for(request.prompt_len
-                                   + request.max_new_tokens))
+    def can_admit(self, prefill_len: int, request: GenerationRequest,
+                  feed=None) -> bool:
+        """Block-exhaustion backpressure: admit when the prefill's NEW
+        blocks plus a one-block growth watermark are free.  Capped at
+        the request's worst-case total so a pool-sized request is still
+        admissible on an idle pool (no livelock).
+
+        With the prefix cache on, pass the actual ``feed`` tokens: the
+        accounting is exact — LIVE matched blocks (another slot holds
+        them) cost nothing, matched blocks in the cached set will be
+        REVIVED (each consumes one unit of allocatable capacity, since
+        ``free_blocks()`` still counts them), the uncached span needs
+        fresh blocks, and a fully-cached feed whose tail block is live
+        needs one more for the copy-on-write fork (a revived tail is
+        sole-owned and rewritten in place instead)."""
+        total = self.blocks_for(request.prompt_len + request.max_new_tokens)
+        if feed is not None and self.prefix_cache:
+            prefill_len = len(feed)
+            revived = live = 0
+            tail_live = False
+            for h in chain_hashes(feed, self.block_size):
+                b = self.pool.lookup(h)
+                if b is None:
+                    break
+                if self.pool.is_cached(b):
+                    revived += 1
+                    tail_live = False
+                else:
+                    live += 1
+                    tail_live = True
+            matched = revived + live
+            fresh = self.blocks_for(prefill_len) - matched
+            fully_cached = matched * self.block_size >= prefill_len
+            fork = 1 if (fully_cached and tail_live) else 0
+            need_cap = fresh + revived + fork
+            need = min(need_cap + 1, max(need_cap, total - live))
+            return self.pool.free_blocks() >= need
+        need = min(self.blocks_for(prefill_len) + 1, total)
         return self.pool.free_blocks() >= need
 
     def needs_block(self, slot: Slot) -> bool:
@@ -286,10 +488,83 @@ class PagedSlotManager(SlotManager):
         block the slot does not hold yet."""
         return slot.pos // self.block_size >= len(slot.blocks)
 
+    # ------------------------------------------------------ prefix caching
+    def matchable_blocks(self, tokens) -> int:
+        """Non-mutating probe: how many consecutive full blocks of
+        ``tokens`` are resident in the hash index right now."""
+        if not self.prefix_cache:
+            return 0
+        n = 0
+        for h in chain_hashes(tokens, self.block_size):
+            if self.pool.lookup(h) is None:
+                break
+            n += 1
+        return n
+
+    def match_prefix(self, tokens) -> tuple[list[int], list[int]]:
+        """Claim the longest cached full-block prefix of ``tokens``:
+        each hit takes a reference on the physical block (reviving it
+        from the cached set if no live slot holds it).  Returns
+        (blocks, hashes); stops at the first miss — hash-chain keying
+        means later blocks cannot match once one misses."""
+        blocks: list[int] = []
+        hashes: list[int] = []
+        if not self.prefix_cache:
+            return blocks, hashes
+        for h in chain_hashes(tokens, self.block_size):
+            b = self.pool.match(h)
+            if b is None:
+                break
+            blocks.append(b)
+            hashes.append(h)
+        self._stats["prefix_block_hits"] += len(blocks)
+        return blocks, hashes
+
+    def ensure_writable(self, blocks: list[int],
+                        blk_idx: int) -> tuple[list[int], tuple | None]:
+        """Copy-on-write gate before any KV write into ``blocks[blk_idx]``.
+
+        Shared (refcount > 1): allocate a private block, hand back our
+        reference on the shared one, and return the updated table plus a
+        ``(src, dst)`` physical copy pair — the CALLER must copy the
+        pool data (the manager only does accounting).  Sole-owner but
+        hash-registered: the content is about to diverge from its key,
+        so drop the index entry and write in place.  Private: no-op."""
+        b = blocks[blk_idx]
+        if self.pool.refcount.get(b, 0) > 1:
+            [new] = self.pool.alloc(1)
+            self.pool.free([b])          # our ref only; sharers keep it
+            blocks = list(blocks)
+            blocks[blk_idx] = new
+            self._stats["cow_forks"] += 1
+            return blocks, (b, new)
+        if self.pool.is_registered(b):
+            self.pool.unregister(b)
+        return blocks, None
+
+    def register_full_blocks(self, slot: Slot, kv_tokens) -> None:
+        """Extend ``slot.block_hashes`` over newly-FULL blocks and key
+        them in the pool's hash index.  ``kv_tokens`` is the token
+        sequence whose KV the slot's blocks hold (prompt + generated so
+        far); called after admission's scatter and whenever decode fills
+        a block.  First-writer-wins on hash collisions with concurrent
+        private fills (``BlockPool.register``)."""
+        if not self.prefix_cache:
+            return
+        bs = self.block_size
+        n_full = min(len(kv_tokens) // bs, len(slot.blocks))
+        h = slot.block_hashes[-1] if slot.block_hashes else None
+        for j in range(len(slot.block_hashes), n_full):
+            blk = tuple(int(t) for t in kv_tokens[j * bs:(j + 1) * bs])
+            h = hash((h, blk))
+            slot.block_hashes.append(h)
+            self.pool.register(slot.blocks[j], h)
+
     def release(self, slot: Slot) -> None:
         super().release(slot)
         self.pool.free(slot.blocks)
         slot.blocks = []
+        slot.block_hashes = []
 
     def preempt(self, slot: Slot) -> None:
         """Release a slot mid-generation (pool pressure).  The engine

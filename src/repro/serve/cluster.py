@@ -255,7 +255,7 @@ class ClusterFrontEnd:
         moved steps between targets."""
         per_engine = {w.worker_id: w.runtime.summary()
                       for w in self.workers}
-        return {
+        out = {
             "per_engine": per_engine,
             "migrations": sum(s["migrations"]
                               for s in per_engine.values()),
@@ -263,3 +263,18 @@ class ClusterFrontEnd:
                           for k, v in self.server.decisions.items()},
             "signals": dataclasses.asdict(self.server.signals()),
         }
+        if any(w.engine.prefix_cache for w in self.workers):
+            # aggregate prefix-cache effectiveness: each worker has its
+            # own pool, so hit rates are per-tenant, summed here the way
+            # migrations are
+            per_worker = {w.worker_id: w.engine.prefix_stats()
+                          for w in self.workers}
+            hit = sum(p["prefix_hit_tokens"] for p in per_worker.values())
+            computed = sum(p["prefill_tokens"] for p in per_worker.values())
+            out["prefix_cache"] = {
+                "per_engine": per_worker,
+                "prefix_hit_tokens": hit,
+                "prefill_tokens": computed,
+                "prefix_hit_rate": hit / max(hit + computed, 1),
+            }
+        return out

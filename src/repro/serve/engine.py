@@ -207,6 +207,20 @@ class ContinuousBatchingEngine:
     head_dim to the TPU lane width at allocation so the ACCEL paged
     kernel never copies the pool to pad it per call.
 
+    **Prefix caching** (``prefix_cache=True``, paged only): admission
+    matches the feed's full-block prefix against the pool's hash-chain
+    index (``serve/batch.chain_hashes``); matched blocks are SHARED
+    (refcounted) and only the uncached span is prefetched — a chunked
+    ``prefill_ctx`` attends over the cached context and the engine
+    scatters just the chunk's KV into freshly-allocated private blocks.
+    Any write into a shared block forks it copy-on-write first; blocks
+    whose last reference drops park in an evictable cached set (LRU)
+    instead of freeing, so a later request with the same prefix revives
+    them for free.  Greedy output is byte-identical cache-on vs
+    cache-off on both backends (the cached KV is bitwise what a fresh
+    prefill would recompute, and masked junk positions contribute exact
+    zeros).
+
     A request whose ``stop_tokens`` fires finishes that step: its slot —
     and, under paging, its blocks — frees immediately for queued
     arrivals instead of idling out the ``max_new_tokens`` budget.
@@ -262,6 +276,7 @@ class ContinuousBatchingEngine:
                  fn_prefix: str = "cb", min_bucket: int = 8,
                  paged: bool = False, block_size: int = 32,
                  num_blocks: Optional[int] = None,
+                 prefix_cache: bool = False,
                  lane_align: Optional[bool] = None,
                  policy: Optional[SchedulingPolicy] = None,
                  backend: str = "auto", eager_accel: bool = True,
@@ -278,6 +293,9 @@ class ContinuousBatchingEngine:
         if paged and cfg.kv_cache_dtype == "int8":
             raise NotImplementedError(
                 "paged KV does not support int8 cache quantization yet")
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache=True requires paged=True "
+                             "(sharing happens at block granularity)")
         if backend not in ("host", "accel", "auto"):
             raise ValueError(f"backend must be host|accel|auto: {backend!r}")
         if backend != "auto":
@@ -304,6 +322,7 @@ class ContinuousBatchingEngine:
         self.runtime = runtime
         self.min_bucket = min_bucket
         self.paged = paged
+        self.prefix_cache = prefix_cache
         self.policy = resolve_policy(policy) if policy is not None else None
         if (self.policy is not None and runtime is None
                 and not isinstance(self.policy, (PinHost, PinAccel))):
@@ -325,7 +344,8 @@ class ContinuousBatchingEngine:
             self.block_size = block_size
             nb = num_blocks or max_slots * (-(-max_seq // block_size))
             self.slots: SlotManager = PagedSlotManager(
-                max_slots, block_size, nb, max_seq=max_seq)
+                max_slots, block_size, nb, max_seq=max_seq,
+                prefix_cache=prefix_cache)
             self.cache = self.model.init_paged_cache(nb + 1, block_size,
                                                      lane_align=lane_align)
             # scatter a prefill's KV blocks into the pool at the slot's
@@ -351,6 +371,35 @@ class ContinuousBatchingEngine:
                     out[k] = pool[k].at[:, phys].set(p.astype(pool[k].dtype))
                 return out
             self._scatter = jax.jit(scatter, donate_argnums=(0,))
+
+            # prefix-cache helpers: a chunked scatter that can START
+            # mid-block (the COW-forked tail keeps its cached prefix, the
+            # re-fed token lands at start_off inside it) and a physical
+            # block copy (the COW fork itself).  Positions >= n_real are
+            # bucket junk, redirected to the reserved junk block 0.
+            def scatter_chunk(pool, part, phys, start_off, n_real):
+                out = {}
+                for k in pool:
+                    p = part[k][:, 0]           # (L, W_bucket, KV, hd)
+                    w = p.shape[1]
+                    intra = start_off + jnp.arange(w)
+                    valid = jnp.arange(w) < n_real
+                    blk = jnp.where(valid, phys[intra // block_size], 0)
+                    off = jnp.where(valid, intra % block_size, 0)
+                    if p.shape[-1] != pool[k].shape[-1]:
+                        p = jnp.pad(p, ((0, 0),) * (p.ndim - 1)
+                                    + ((0, pool[k].shape[-1]
+                                        - p.shape[-1]),))
+                    out[k] = pool[k].at[:, blk, off].set(
+                        p.astype(pool[k].dtype))
+                return out
+
+            def copy_block(pool, dst, src):
+                return {k: pool[k].at[:, dst].set(pool[k][:, src])
+                        for k in pool}
+
+            self._scatter_chunk = jax.jit(scatter_chunk, donate_argnums=(0,))
+            self._copy_block = jax.jit(copy_block, donate_argnums=(0,))
         else:
             self.slots = SlotManager(max_slots, max_seq)
             self.cache = self.model.init_cache(max_slots, max_seq)
@@ -367,6 +416,14 @@ class ContinuousBatchingEngine:
             lambda p, c, b: self.model.decode_sampled(p, c, b,
                                                       backend=direct),
             donate_argnums=(1,))
+        if self.prefix_cache:
+            # chunked prefill against the pool (prefix-cache hits skip
+            # the cached span).  The pool is NOT donated: matched blocks
+            # are shared, and the chunk's KV is returned for an explicit
+            # scatter into the slot's private blocks only.
+            self._prefill_ctx = jax.jit(
+                lambda p, c, b: self.model.prefill_ctx_sampled(
+                    p, c, b, backend=direct))
         # one fused in-place write of a request's bucketed prefill KV into
         # its cache row (eager per-leaf updates would each materialize a
         # full copy of the whole batched cache)
@@ -379,6 +436,7 @@ class ContinuousBatchingEngine:
                 for k in cache},
             donate_argnums=(0,))
         self._prefill_name = f"{fn_prefix}_prefill"
+        self._prefill_ctx_name = f"{fn_prefix}_prefill_ctx"
         self._decode_name = f"{fn_prefix}_decode"
         self.engine_id = fn_prefix
         self.results: dict[int, RequestOutput] = {}
@@ -402,9 +460,31 @@ class ContinuousBatchingEngine:
 
     def reset_stats(self) -> None:
         """Zero the per-serve counters (benchmarks call this after their
-        warm-up pass so warm-up steps don't pollute measured stats)."""
+        warm-up pass so warm-up steps don't pollute measured stats).
+        ``prefill_tokens`` counts tokens actually COMPUTED by prefill
+        (real feed positions, not bucket padding); ``prefix_hit_tokens``
+        counts prompt positions served from the prefix cache instead —
+        their ratio is the cache hit rate."""
         self.stats = {"prefills": 0, "decode_steps": 0,
-                      "decode_row_util": 0.0}
+                      "decode_row_util": 0.0,
+                      "prefill_tokens": 0, "prefix_hit_tokens": 0}
+
+    def prefix_stats(self) -> dict:
+        """Prefix-cache effectiveness counters (zeros when caching is
+        off): token hit rate plus the pool/manager sharing counters."""
+        computed = self.stats["prefill_tokens"]
+        hit = self.stats["prefix_hit_tokens"]
+        out = {"prefill_tokens": computed, "prefix_hit_tokens": hit,
+               "prefix_hit_rate": hit / max(hit + computed, 1)}
+        if self.paged:
+            pool = self.slots.pool
+            out.update(cow_forks=self.slots._stats["cow_forks"],
+                       prefix_block_hits=self.slots._stats[
+                           "prefix_block_hits"],
+                       cache_hits=pool.stats["cache_hits"],
+                       evicted=pool.stats["evicted"],
+                       cached_blocks=pool.cached_blocks())
+        return out
 
     def _now(self) -> float:
         """Engine-loop clock (seconds since the current run() started)."""
@@ -438,8 +518,12 @@ class ContinuousBatchingEngine:
                     "recent_exec_ms", accel_ms)
         ttft = sorted(t for t, _ in self._latency_window)
         tpot = sorted(t for _, t in self._latency_window)
+        # arrived_len, not len(): the heap also holds scheduled-but-
+        # future arrivals (pre-submitted Poisson streams), which are not
+        # load yet — counting them inflated x86_load and tripped
+        # queue_depth_hi thresholds before any request existed
         return LoadSignals(
-            queue_depth=len(self.queue),
+            queue_depth=self.queue.arrived_len(self._now()),
             active_slots=len(self.slots.active),
             free_kv_frac=free,
             host_decode_ms=host_ms,
@@ -512,6 +596,29 @@ class ContinuousBatchingEngine:
         rt.prepare(self._prefill_name, *ex_prefill, eager_accel=eager_accel)
         rt.prepare(self._decode_name, *ex_decode, donate_argnums=(1,),
                    eager_accel=eager_accel)
+        if self.paged and self.prefix_cache:
+            # chunked context prefill has no Pallas kernel yet: both
+            # targets run the XLA gather reference (identical math, like
+            # the int8 case above), so the ACCEL pre-configuration stays
+            # asynchronous.  Migration correctness is untouched — decode
+            # still swaps real kernels, and a migrated request's pool
+            # blocks are target-agnostic.
+            def prefill_ctx_fn(params, cache, batch):
+                return self.model.prefill_ctx_sampled(params, cache, batch)
+
+            if self._prefill_ctx_name not in rt.registry:
+                rt.registry.register(MigratableFunction(
+                    self._prefill_ctx_name, self._prefill_ctx_name,
+                    {TargetKind.HOST: prefill_ctx_fn,
+                     TargetKind.ACCEL: prefill_ctx_fn}))
+            ex_ctx = (self.params, self.cache,
+                      {"tokens": jnp.zeros((1, self.min_bucket), jnp.int32),
+                       "offset": jnp.zeros((1,), jnp.int32),
+                       "length": jnp.ones((1,), jnp.int32),
+                       "block_table": jnp.zeros(
+                           (1, self.slots.table_width), jnp.int32),
+                       **sampling_leaves(greedy, 1)})
+            rt.prepare(self._prefill_ctx_name, *ex_ctx, eager_accel=False)
 
     # -------------------------------------------------------- admission
     def submit(self, request, max_new_tokens: int = 16,
@@ -603,6 +710,13 @@ class ContinuousBatchingEngine:
             return True
         resume = self._resume.get(req.req_id)
         plen = req.prompt_len + (len(resume[0]) - 1 if resume else 0)
+        if self.prefix_cache:
+            # admission must see the actual feed: cached blocks cost
+            # nothing, so only the uncached span (+ the COW fork when
+            # fully cached) gates admission
+            feed = req.prompt if resume is None else np.concatenate(
+                [req.prompt, np.asarray(resume[0][:-1], np.int32)])
+            return self.slots.can_admit(plen, req, feed=feed)
         return self.slots.can_admit(plen, req)
 
     def _admit(self, req: GenerationRequest, now: float = 0.0) -> None:
@@ -618,6 +732,15 @@ class ContinuousBatchingEngine:
             feed = np.concatenate(
                 [req.prompt, np.asarray(resume[0][:-1], np.int32)])
         S = len(feed)
+        if self.paged and self.prefix_cache:
+            try:
+                slot = self._admit_cached(req, feed, S, resume)
+            except RuntimeError:         # pool raced dry: undo the pop
+                if resume is not None:
+                    self._resume[req.req_id] = resume
+                raise
+            self._post_admit(slot, req, now)
+            return
         Sb = prompt_bucket(S, self.min_bucket)
         toks = np.zeros((1, Sb), np.int32)
         toks[0, :S] = feed
@@ -630,6 +753,7 @@ class ContinuousBatchingEngine:
         else:
             tok0, lp0, pc = self._prefill(self.params, batch)
         self.stats["prefills"] += 1
+        self.stats["prefill_tokens"] += S
         if resume is None:
             # first token sampled IN-GRAPH at position = prompt length
             first, tokens, logprobs = int(np.asarray(tok0)[0]), None, None
@@ -663,6 +787,10 @@ class ContinuousBatchingEngine:
                                               axis=2) for k in pc}
             self.cache = self._write_slot(self.cache, pc,
                                           jnp.int32(slot.index))
+        self._post_admit(slot, req, now)
+
+    def _post_admit(self, slot: Slot, req: GenerationRequest,
+                    now: float) -> None:
         slot.t_admit = now
         handle = self._handle_for(req)
         if handle.t_admit is None:     # first admission only (not resume)
@@ -674,6 +802,91 @@ class ContinuousBatchingEngine:
         self._sync_handle(slot, t_tok)
         if slot.done:            # max_new_tokens reached or stop token
             self._finish(slot, t_tok)
+
+    def _admit_cached(self, req: GenerationRequest, feed: np.ndarray,
+                      S: int, resume) -> Slot:
+        """Admission with prefix caching: match the feed's full-block
+        prefix against the pool's hash index, allocate only the uncached
+        span's blocks, and prefill the CHUNK ``feed[offset:]`` against
+        the cached context.
+
+        When the whole feed is cached (C >= S, a block-aligned repeat),
+        the last feed token is re-fed as a one-token chunk at offset
+        S - 1: its logits reproduce the uncached first sample, and its
+        KV write targets the last MATCHED block — which ``ensure_writable``
+        forks copy-on-write first, so sharers are untouched.  Otherwise
+        the chunk starts at the block-aligned offset C and writes land
+        only in freshly-allocated private blocks."""
+        bs = self.slots.block_size
+        # match BEFORE alloc: references on matched blocks keep the LRU
+        # eviction inside alloc() from reclaiming them
+        matched, hashes = self.slots.match_prefix(feed)
+        C = len(matched) * bs
+        offset = C if C < S else S - 1
+        n_chunk = S - offset
+        n_total = self.slots.blocks_for(S)
+        try:
+            fresh = (self.slots.pool.alloc(n_total - len(matched))
+                     if n_total > len(matched) else [])
+        except RuntimeError:
+            # pool raced dry between can_admit and here: hand back the
+            # matched references before re-raising
+            self.slots.pool.free(matched)
+            raise
+        blocks = matched + fresh
+        tail = offset // bs
+        copy = None
+        if tail < len(matched):          # chunk writes into a matched block
+            try:
+                blocks, copy = self.slots.ensure_writable(blocks, tail)
+            except RuntimeError:         # no block left for the COW fork
+                self.slots.pool.free(matched + fresh)
+                raise
+            hashes = hashes[:tail]
+        if copy is not None:
+            src, dst = copy
+            self.cache = self._copy_block(self.cache, jnp.int32(dst),
+                                          jnp.int32(src))
+        self.stats["prefix_hit_tokens"] += offset
+        self.stats["prefill_tokens"] += n_chunk
+        Cb = prompt_bucket(n_chunk, self.min_bucket)
+        toks = np.zeros((1, Cb), np.int32)
+        toks[0, :n_chunk] = feed[offset:]
+        table = np.zeros((1, self.slots.table_width), np.int32)
+        table[0, :len(blocks)] = blocks
+        batch = {"tokens": jnp.asarray(toks),
+                 "offset": jnp.full((1,), offset, jnp.int32),
+                 "length": jnp.full((1,), S, jnp.int32),
+                 "block_table": jnp.asarray(table),
+                 **sampling_leaves(req.sampling, 1)}
+        if self.runtime is not None:
+            tok0, lp0, pc = self.runtime.call(self._prefill_ctx_name,
+                                              self.params, self.cache, batch)
+        else:
+            tok0, lp0, pc = self._prefill_ctx(self.params, self.cache, batch)
+        self.stats["prefills"] += 1
+        if resume is None:
+            first, tokens, logprobs = int(np.asarray(tok0)[0]), None, None
+            first_lp = float(np.asarray(lp0)[0])
+        else:
+            first, (tokens, logprobs) = resume[0][-1], resume
+            first_lp = 0.0
+        # scatter the chunk's KV into the blocks covering [offset, S);
+        # phys is padded with junk block 0 to a static per-bucket width
+        span = blocks[tail:]
+        nphys = (Cb + 2 * bs - 2) // bs
+        phys = np.zeros((nphys,), np.int32)
+        phys[:len(span)] = span
+        self.cache = self._scatter_chunk(self.cache, pc,
+                                         jnp.asarray(phys),
+                                         jnp.int32(offset % bs),
+                                         jnp.int32(n_chunk))
+        slot = self.slots.admit(req, first, blocks=blocks, tokens=tokens,
+                                logprobs=logprobs, first_logprob=first_lp,
+                                pos=S)
+        slot.block_hashes = hashes
+        self.slots.register_full_blocks(slot, feed)
+        return slot
 
     def _sync_handle(self, slot: Slot, now: float) -> None:
         """Stream any not-yet-emitted tokens to the request's handle.
@@ -724,14 +937,35 @@ class ContinuousBatchingEngine:
         for slot in sorted(self.slots.active.values(), key=lambda s: s.seq):
             if self.slots.active.get(slot.index) is not slot:
                 continue                   # preempted earlier this pass
-            if not self.slots.needs_block(slot):
-                continue
-            while not self.slots.pool.free_blocks():
-                victims = [s for s in self.slots.active.values()
-                           if s is not slot]
-                assert victims, "validate() bounds a lone slot to the pool"
-                self._preempt(max(victims, key=lambda s: s.seq))
-            slot.blocks.extend(self.slots.pool.alloc(1))
+            if self.slots.needs_block(slot):
+                while not self.slots.pool.free_blocks():
+                    victims = [s for s in self.slots.active.values()
+                               if s is not slot]
+                    assert victims, "validate() bounds a lone slot to the pool"
+                    self._preempt(max(victims, key=lambda s: s.seq))
+                slot.blocks.extend(self.slots.pool.alloc(1))
+            elif self.prefix_cache:
+                # defense in depth: decode normally only ever writes its
+                # own private tail block (admission forks the re-fed
+                # tail), but if the write target is somehow shared, fork
+                # it copy-on-write rather than corrupt the sharers
+                blk_idx = slot.pos // self.slots.block_size
+                if self.slots.pool.refcount.get(slot.blocks[blk_idx],
+                                                0) > 1:
+                    while not self.slots.pool.free_blocks():
+                        victims = [s for s in self.slots.active.values()
+                                   if s is not slot]
+                        assert victims, "a lone slot shares with no one"
+                        self._preempt(max(victims, key=lambda s: s.seq))
+                blocks, copy = self.slots.ensure_writable(slot.blocks,
+                                                          blk_idx)
+                if copy is not None:
+                    src, dst = copy
+                    self.cache = self._copy_block(self.cache,
+                                                  jnp.int32(dst),
+                                                  jnp.int32(src))
+                    slot.blocks = blocks
+                    slot.block_hashes = slot.block_hashes[:blk_idx]
 
     def _decode_step(self) -> None:
         if self.paged:
@@ -767,9 +1001,23 @@ class ContinuousBatchingEngine:
             slot.last_token = t
             slot.pos += 1
             slot.t_last_token = now
+            if (self.prefix_cache
+                    and slot.pos % self.slots.block_size == 0):
+                # a block just filled: key it in the prefix index so a
+                # follow-up request sharing prompt+generated matches it
+                self.slots.register_full_blocks(slot,
+                                                self._kv_tokens(slot))
             self._sync_handle(slot, now)
             if slot.done:
                 self._finish(slot, now)
+
+    def _kv_tokens(self, slot: Slot) -> list[int]:
+        """Tokens whose KV the slot's blocks hold, in position order:
+        prompt then generated (the decode at step k writes token k's KV
+        at its position before sampling token k+1), truncated to the
+        written span.  Holds across resume too — the resume feed is
+        prompt + replayed[:-1], a prefix of prompt + tokens."""
+        return (list(slot.request.prompt) + slot.tokens)[:slot.pos]
 
     # ------------------------------------------------------- serve loop
     def run(self, requests: Iterable[GenerationRequest] = (),

@@ -88,6 +88,16 @@ class RequestQueue:
         with self._lock:
             return self._heap[0][0] if self._heap else None
 
+    def arrived_len(self, now: float) -> int:
+        """Requests with ``arrival_s <= now`` — the queue depth that is
+        actually LOAD.  ``len(queue)`` is the whole arrival heap, which
+        for a pre-scheduled stream (e.g. Poisson benchmark arrivals)
+        counts requests that do not exist yet; publishing that as
+        ``LoadSignals.queue_depth`` inflated ``x86_load`` and tripped
+        queue-depth policy thresholds before any real pressure."""
+        with self._lock:
+            return sum(1 for a, _, _ in self._heap if a <= now)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._heap)

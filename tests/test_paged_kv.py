@@ -92,7 +92,8 @@ def test_block_pool_alloc_free_exhaustion():
         pool.alloc(2)
     pool.free(a)
     assert pool.free_blocks() == 3
-    assert pool.stats == {"allocated": 2, "freed": 2, "peak_in_use": 2}
+    assert pool.stats == {"allocated": 2, "freed": 2, "peak_in_use": 2,
+                          "cache_hits": 0, "evicted": 0}
 
 
 def test_block_exhaustion_backpressure_gates_admission(cfg, sync_engine):

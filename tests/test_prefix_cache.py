@@ -1,0 +1,355 @@
+"""Prefix caching with copy-on-write paged KV: hash-chain keying,
+block-pool refcount/validation semantics, LRU eviction of cached
+blocks, deduped fragmentation accounting, COW forks, and byte-identical
+greedy tokens cache-on vs cache-off on HOST, ACCEL, under forced
+mid-stream migration, and across preempt/resume of shared blocks.
+
+The byte-identity tests pin ``kv_cache_dtype`` to the compute dtype:
+a lossy pool dtype (f32 compute over a bf16 pool) would make cache-on
+reads of the matched prefix differ from cache-off's in-flight KV by a
+rounding step — the cache must be lossless for bitwise equivalence
+(bf16/bf16 and f32/f32 both are).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.function import FunctionRegistry
+from repro.core.runtime import XarTrekRuntime
+from repro.serve import (BlockPool, ContinuousBatchingEngine,
+                         GenerationRequest, PagedSlotManager, ServeEngine)
+from repro.serve.batch import chain_hashes
+
+
+def _serve(engine, reqs=()):
+    return {rid: out.tokens for rid, out in engine.run(reqs).items()}
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(reduced(ARCHS["smollm-135m"]),
+                               dtype="float32", kv_cache_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def sync_engine(cfg):
+    return ServeEngine(cfg, seed=0)
+
+
+def _prompt_set(cfg):
+    """Five prompts exercising every match class against one shared
+    16-token (2-block at bs=8) base: two live-sharing suffix variants,
+    one exact block-aligned repeat (the fully-cached COW case), one
+    partial-block divergence (matches exactly 1 block), one full miss."""
+    rng = np.random.RandomState(42)
+    base = rng.randint(0, cfg.vocab_size, size=16)
+    other = rng.randint(0, cfg.vocab_size, size=16)
+    return [
+        np.concatenate([base, rng.randint(0, cfg.vocab_size, size=3)]),
+        np.concatenate([base, rng.randint(0, cfg.vocab_size, size=3)]),
+        base.copy(),
+        np.concatenate([base[:12], rng.randint(0, cfg.vocab_size, size=4)]),
+        other,
+    ]
+
+
+def _reqs(prompts, n=6):
+    return [GenerationRequest(np.asarray(p, np.int32), max_new_tokens=n)
+            for p in prompts]
+
+
+def _engine(cfg, params, *, prefix=True, **kw):
+    base = dict(max_slots=5, max_seq=64, params=params,
+                paged=True, block_size=8, num_blocks=24)
+    base.update(kw)
+    return ContinuousBatchingEngine(cfg, prefix_cache=prefix, **base)
+
+
+# ------------------------------------------------------------ hash chain
+
+def test_chain_hashes_full_blocks_only():
+    t = list(range(20))
+    assert chain_hashes(t[:7], 8) == []            # partial block: no key
+    assert len(chain_hashes(t[:8], 8)) == 1
+    assert len(chain_hashes(t, 8)) == 2            # 20 tokens -> 2 full
+
+
+def test_chain_hashes_prefix_property_and_divergence():
+    a = list(range(32))
+    h = chain_hashes(a, 8)
+    assert chain_hashes(a + [99, 100], 8) == h     # extension keeps prefix
+    b = list(a)
+    b[10] = 999                                    # diverge inside block 1
+    hb = chain_hashes(b, 8)
+    assert hb[0] == h[0]                           # block 0 untouched
+    assert hb[1] != h[1]
+    assert hb[2] != h[2]                           # chain: all later differ
+    c = list(a)
+    c[0] = 999                                     # diverge in block 0
+    assert all(x != y for x, y in zip(chain_hashes(c, 8), h))
+
+
+# ------------------------------------------------- pool refcount + free()
+
+def test_block_pool_free_validates_ids():
+    pool = BlockPool(num_blocks=4, block_size=8)
+    blocks = pool.alloc(2)
+    with pytest.raises(ValueError, match="junk block 0"):
+        pool.free([0])
+    with pytest.raises(ValueError, match="out of range"):
+        pool.free([5])
+    with pytest.raises(ValueError, match="out of range"):
+        pool.free([-1])
+    # a never-allocated (but in-range) id is a double free
+    spare = next(b for b in range(1, 5) if b not in blocks)
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([spare])
+    pool.free([blocks[0]])
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([blocks[0]])
+    # duplicate ids inside ONE call: second occurrence must raise too
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([blocks[1], blocks[1]])
+
+
+def test_block_pool_refcounted_sharing():
+    pool = BlockPool(num_blocks=4, block_size=8)
+    [b] = pool.alloc(1)
+    pool.ref(b)                                    # second holder
+    assert pool.blocks_in_use() == 1               # physical, not logical
+    pool.free([b])
+    assert pool.blocks_in_use() == 1               # one holder remains
+    pool.free([b])
+    assert pool.blocks_in_use() == 0
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.ref(b)
+
+
+def test_block_pool_cached_revive_and_lru_eviction():
+    pool = BlockPool(num_blocks=4, block_size=8)
+    b1, b2 = pool.alloc(2)
+    assert pool.register(b1, 101) and pool.register(b2, 202)
+    assert not pool.register(b1, 303)              # block already keyed
+    pool.free([b1, b2])
+    # refcount 0 but registered: parked cached, still allocatable
+    assert pool.cached_blocks() == 2
+    assert pool.free_blocks() == 4
+    assert pool.blocks_in_use() == 0
+    # miss leaves the cache alone; hit revives (consumes capacity)
+    assert pool.match(999) is None
+    assert pool.match(202) == b2
+    assert pool.refcount[b2] == 1
+    assert pool.free_blocks() == 3
+    assert pool.stats["cache_hits"] == 1
+    # a fresh alloc exhausts the free list then evicts the LRU cached
+    got = pool.alloc(3)
+    assert b1 in got                               # evicted + reused
+    assert pool.stats["evicted"] == 1
+    assert pool.lookup(101) is None                # key dropped on evict
+    assert pool.lookup(202) == b2                  # live block keeps its key
+    assert not pool.register(got[0], 202)          # first writer wins
+
+
+def test_block_pool_unregister_cached_returns_to_free():
+    pool = BlockPool(num_blocks=2, block_size=4)
+    [b] = pool.alloc(1)
+    pool.register(b, 7)
+    pool.free([b])
+    assert pool.is_cached(b)
+    pool.unregister(b)                             # no longer reachable
+    assert pool.cached_blocks() == 0
+    assert pool.free_blocks() == 2
+    assert pool.lookup(7) is None
+
+
+# ------------------------------------- manager: match / COW / fragmentation
+
+def test_manager_prefix_match_and_shared_fragmentation():
+    mgr = PagedSlotManager(max_slots=2, block_size=4, num_blocks=16,
+                           max_seq=32, prefix_cache=True)
+    prompt = list(range(8))                        # 2 full blocks
+    ra, rb = (GenerationRequest(np.asarray(prompt, np.int32),
+                                max_new_tokens=4) for _ in range(2))
+    blocks = mgr.pool.alloc(2)
+    sa = mgr.admit(ra, first_token=1, blocks=blocks)
+    mgr.register_full_blocks(sa, prompt)
+    assert sa.block_hashes == chain_hashes(prompt, 4)
+    # partial tail block is never matchable
+    assert mgr.matchable_blocks(prompt[:6]) == 1
+    assert mgr.matchable_blocks(prompt) == 2
+    got, hashes = mgr.match_prefix(prompt)
+    assert got == blocks and hashes == sa.block_hashes
+    assert mgr.pool.refcount[blocks[0]] == 2       # shared, refcounted
+    sb = mgr.admit(rb, first_token=1, blocks=got)
+    frag = mgr.fragmentation()
+    assert frag["reserved_positions"] == 2 * 4     # physical: deduped
+    assert frag["shared_positions"] == 2 * 4       # the 2 extra logical
+    assert frag["used_positions"] == 16
+    assert frag["frag_positions"] == 0
+    assert mgr.pool.blocks_in_use() == 2
+    # COW: a write into the shared tail forks it for the writer only
+    new_blocks, copy = mgr.ensure_writable(sb.blocks, 1)
+    assert copy == (blocks[1], new_blocks[1])
+    assert new_blocks[1] != blocks[1]
+    assert mgr.pool.refcount[blocks[1]] == 1       # sa keeps the original
+    assert mgr._stats["cow_forks"] == 1
+    sb.blocks = new_blocks
+    # sole-owner registered block: rewritten in place, key dropped
+    in_place, copy2 = mgr.ensure_writable(sa.blocks, 1)
+    assert copy2 is None and in_place[1] == blocks[1]
+    assert not mgr.pool.is_registered(blocks[1])
+    mgr.release(sa)
+    mgr.release(sb)
+    assert mgr.pool.blocks_in_use() == 0
+
+
+# --------------------------------------------- engine: byte identity (HOST)
+
+def test_host_cache_on_off_byte_identical_with_hits(cfg, sync_engine):
+    """The headline invariant: greedy tokens are byte-identical with the
+    prefix cache on vs off, while the cache-on engine computes strictly
+    fewer prefill tokens, shares blocks live (shared_positions > 0
+    mid-run), and forks COW at least once (the exact-repeat prompt)."""
+    prompts = _prompt_set(cfg)
+    off = _engine(cfg, sync_engine.params, prefix=False)
+    r_off = _reqs(prompts)
+    want = _serve(off, r_off)
+
+    shared_seen = []
+
+    def watch(engine):
+        shared_seen.append(
+            engine.slots.fragmentation()["shared_positions"])
+
+    on = _engine(cfg, sync_engine.params, on_step=watch)
+    r_on = _reqs(prompts)
+    got = _serve(on, r_on)
+
+    for a, b in zip(r_off, r_on):
+        np.testing.assert_array_equal(want[a.req_id], got[b.req_id])
+    ps = on.prefix_stats()
+    assert ps["prefill_tokens"] < off.prefix_stats()["prefill_tokens"]
+    assert ps["prefix_hit_tokens"] >= 30           # 16 + 15 + 8 exact
+    assert ps["prefix_hit_rate"] > 0.3
+    assert ps["cow_forks"] >= 1                    # the exact-repeat prompt
+    assert ps["prefix_block_hits"] >= 5
+    assert max(shared_seen) > 0                    # blocks WERE shared live
+    assert on.slots.pool.blocks_in_use() == 0      # fully drained
+    assert on.slots.pool.cached_blocks() > 0       # prefixes stay warm
+
+
+def test_host_cached_revival_across_runs(cfg, sync_engine):
+    """Blocks released at completion park in the cached set; a later run
+    with the same prefix revives them instead of re-prefilling."""
+    rng = np.random.RandomState(5)
+    base = rng.randint(0, cfg.vocab_size, size=16)
+    eng = _engine(cfg, sync_engine.params)
+    _serve(eng, _reqs([base]))
+    assert eng.slots.pool.blocks_in_use() == 0
+    assert eng.slots.pool.cached_blocks() >= 2
+    eng.reset_stats()
+    suffix = np.concatenate([base, rng.randint(0, cfg.vocab_size, size=3)])
+    _serve(eng, _reqs([suffix]))
+    ps = eng.prefix_stats()
+    assert ps["prefix_hit_tokens"] == 16           # both base blocks revived
+    assert ps["prefill_tokens"] == 3
+
+
+def test_eviction_under_pressure_keeps_pool_sound(cfg, sync_engine):
+    """A pool too small to keep every finished prefix warm evicts LRU
+    cached blocks to serve new allocations — and the free/cached
+    accounting still drains to a full pool."""
+    rng = np.random.RandomState(9)
+    eng = _engine(cfg, sync_engine.params, max_slots=1, max_seq=32,
+                  num_blocks=6)
+    for i in range(3):
+        prompt = rng.randint(0, cfg.vocab_size, size=16)
+        out = _serve(eng, _reqs([prompt], n=4))
+        assert all(len(t) == 4 for t in out.values())
+    pool = eng.slots.pool
+    assert pool.stats["evicted"] >= 1
+    assert pool.blocks_in_use() == 0
+    assert pool.free_blocks() == pool.num_blocks
+
+
+# ------------------------------------------- ACCEL / migration / preemption
+
+def test_accel_cache_on_off_byte_identical(cfg, sync_engine):
+    prompts = _prompt_set(cfg)
+    off = _engine(cfg, sync_engine.params, prefix=False, backend="accel")
+    r_off = _reqs(prompts)
+    want = _serve(off, r_off)
+    on = _engine(cfg, sync_engine.params, backend="accel")
+    r_on = _reqs(prompts)
+    got = _serve(on, r_on)
+    for a, b in zip(r_off, r_on):
+        np.testing.assert_array_equal(want[a.req_id], got[b.req_id])
+    assert on.prefix_stats()["prefix_hit_tokens"] > 0
+
+
+def test_migration_cache_on_off_byte_identical(cfg, sync_engine):
+    """Forced HOST -> ACCEL -> HOST mid-stream with the prefix cache on:
+    shared paged blocks survive a real kernel swap bit-for-bit."""
+    prompts = _prompt_set(cfg)
+    off = _engine(cfg, sync_engine.params, prefix=False)
+    r_off = _reqs(prompts)
+    want = _serve(off, r_off)
+
+    rt = XarTrekRuntime(registry=FunctionRegistry(), policy="always_host")
+
+    def flip(engine):
+        s = engine.stats["decode_steps"]
+        if s == 1:
+            rt.server.policy = "always_accel"
+        elif s == 3:
+            rt.server.policy = "always_host"
+
+    on = _engine(cfg, sync_engine.params, runtime=rt, on_step=flip)
+    r_on = _reqs(prompts)
+    got = _serve(on, r_on)
+    for a, b in zip(r_off, r_on):
+        np.testing.assert_array_equal(want[a.req_id], got[b.req_id])
+    decode = rt.summary()["per_function"]["cb_decode"]
+    assert decode["calls"].get("host", 0) >= 1
+    assert decode["calls"].get("accel", 0) >= 1    # both targets served
+    assert on.prefix_stats()["prefix_hit_tokens"] > 0
+
+
+def test_preempt_resume_with_shared_blocks_byte_identical(cfg, sync_engine):
+    """Two long generations sharing a one-block prefix on a pool too
+    small for both: the youngest is preempted WHILE holding shared
+    blocks, resumes by re-prefill (matching its own cached blocks), and
+    greedy tokens still equal the dense engine's."""
+    rng = np.random.RandomState(3)
+    prefix = rng.randint(0, cfg.vocab_size, size=4)
+    p1 = np.concatenate([prefix, rng.randint(0, cfg.vocab_size, size=2)])
+    p2 = np.concatenate([prefix, rng.randint(0, cfg.vocab_size, size=2)])
+    dense = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=24,
+                                     params=sync_engine.params)
+    d1, d2 = _reqs([p1, p2], n=12)
+    want = _serve(dense, [d1, d2])
+    small = _engine(cfg, sync_engine.params, max_slots=2, max_seq=24,
+                    block_size=4, num_blocks=8)
+    s1, s2 = _reqs([p1, p2], n=12)
+    got = _serve(small, [s1, s2])
+    assert small.slots.stats["preempted"] >= 1
+    np.testing.assert_array_equal(want[d1.req_id], got[s1.req_id])
+    np.testing.assert_array_equal(want[d2.req_id], got[s2.req_id])
+    assert small.slots.pool.blocks_in_use() == 0
+
+
+# ---------------------------------------------------- load-signal bugfix
+
+def test_queue_depth_counts_only_arrived_requests(cfg, sync_engine):
+    """Regression: pre-submitted future arrivals (Poisson streams) are
+    not load yet — signals().queue_depth must not count them."""
+    eng = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=32,
+                                   params=sync_engine.params)
+    eng.submit(GenerationRequest(np.arange(1, 5, dtype=np.int32),
+                                 max_new_tokens=2, arrival_s=1e9))
+    assert len(eng.queue) == 1
+    assert eng.signals().queue_depth == 0          # not arrived yet
+    assert eng.queue.arrived_len(0.0) == 0
+    assert eng.queue.arrived_len(2e9) == 1
