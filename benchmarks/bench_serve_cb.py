@@ -45,7 +45,15 @@ budgets) served three ways on the same model and weights:
     STRICTLY fewer prefill tokens (asserted) and the artifact reports
     the prefix hit rate, admitted concurrency and TTFT percentiles
     (``floor.json`` bounds ``prefix_hit_rate`` from below and
-    ``prefix_ttft_p50_s`` from above).
+    ``prefix_ttft_p50_s`` from above);
+  * int8 quantised paged KV — the SAME Zipf stream over an int8+scales
+    pool given exactly the f32 pool's byte budget: block capacity at
+    equal bytes (>= 1.8x, asserted), prefix hit rate, bitwise
+    first-token agreement with the f32 engine (asserted; first tokens
+    come from exact f32 prefill math) and the full-stream greedy match
+    fraction (``floor.json`` bounds ``int8_capacity_ratio``,
+    ``int8_prefix_hit_rate``, ``int8_first_token_match`` and
+    ``int8_greedy_match_frac`` from below).
 
 Emits ``serve_cb/*`` rows; derived carries tok/s for each engine, the
 continuous/synchronous throughput ratio, and the paged engine's peak
@@ -75,6 +83,7 @@ from repro.core.function import FunctionRegistry
 from repro.core.policy import Decision, PinAccel
 from repro.core.runtime import XarTrekRuntime
 from repro.core.targets import TargetKind
+from repro.models.attention import paged_kv_block_bytes
 from repro.serve import (ClusterFrontEnd, ContinuousBatchingEngine,
                          GenerationRequest, SamplingParams, ServeEngine)
 from repro.serve.scheduler import RequestQueue, poisson_arrivals
@@ -311,11 +320,17 @@ def main(argv=None) -> int:
     preqs = make_prefix_requests(cfg.vocab_size, n_prefix, args.rate,
                                  args.seed)
     ptokens = total_tokens(preqs)
+    # prefix engines pin kv_cache_dtype=float32: the engine refuses a
+    # prefix cache over a lossy pool (f32 compute over the default bf16
+    # pool rounds on write), and f32 is the equal-bytes baseline the
+    # int8 run below is measured against
+    pcfg = dataclasses.replace(cfg, kv_cache_dtype="float32")
+    n_pblocks = MAX_SLOTS * MAX_SEQ // BLOCK_SIZE
     pkw = dict(max_slots=2 * MAX_SLOTS, max_seq=MAX_SEQ,
                params=sync.params, paged=True, block_size=BLOCK_SIZE,
-               num_blocks=MAX_SLOTS * MAX_SEQ // BLOCK_SIZE)
-    pfx_off = ContinuousBatchingEngine(cfg, fn_prefix="pfo", **pkw)
-    pfx_on = ContinuousBatchingEngine(cfg, fn_prefix="pfx",
+               num_blocks=n_pblocks)
+    pfx_off = ContinuousBatchingEngine(pcfg, fn_prefix="pfo", **pkw)
+    pfx_on = ContinuousBatchingEngine(pcfg, fn_prefix="pfx",
                                       prefix_cache=True, **pkw)
     warm(pfx_off, cfg.vocab_size)
     warm(pfx_on, cfg.vocab_size)
@@ -342,6 +357,49 @@ def main(argv=None) -> int:
         "prefix_ttft_p50_s": pttft[len(pttft) // 2],
         "prefix_ttft_p90_s": pttft[int(len(pttft) * 0.9)
                                    if len(pttft) > 1 else 0],
+    })
+
+    # int8 quantised pool at EQUAL KV BYTES: the same Zipf stream over
+    # an int8+scales pool given exactly the f32 pool's byte budget.
+    # The capacity win (>= 1.8x blocks) and the prefix hit rate must
+    # hold TOGETHER — more blocks are worthless if quantisation broke
+    # block-hash reuse.  Tolerance story: each request's first token
+    # comes from exact f32 prefill math and must match the f32 engine
+    # bitwise; deeper tokens may flip where the random-init model's
+    # top-2 logit margin is below the int8 perturbation, so the full
+    # stream gets a match-fraction floor rather than an equality check.
+    f32_bytes = paged_kv_block_bytes(BLOCK_SIZE, cfg.num_kv_heads,
+                                     cfg.resolved_head_dim, "float32")
+    i8_bytes = paged_kv_block_bytes(BLOCK_SIZE, cfg.num_kv_heads,
+                                    cfg.resolved_head_dim, "int8")
+    n_i8 = int(n_pblocks * f32_bytes) // i8_bytes
+    icfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    pfx_i8 = ContinuousBatchingEngine(
+        icfg, fn_prefix="pfi", prefix_cache=True,
+        allow_lossy_prefix_cache=True,
+        **dict(pkw, num_blocks=n_i8))
+    warm(pfx_i8, cfg.vocab_size)
+    t_pfx_i8, iouts = serve_continuous(pfx_i8, [dataclasses.replace(r)
+                                                for r in preqs])
+    i8_stats = pfx_i8.prefix_stats()
+    cap_ratio = n_i8 / n_pblocks
+    assert cap_ratio >= 1.8, (n_i8, n_pblocks)
+    firsts = [int(pouts[r].tokens[0]) == int(iouts[r].tokens[0])
+              for r in pouts]
+    assert all(firsts), "int8 first tokens diverged from f32 prefill"
+    matched = total = 0
+    for r in pouts:
+        a, b = pouts[r].tokens, iouts[r].tokens
+        n = min(len(a), len(b))
+        matched += int((a[:n] == b[:n]).sum())
+        total += n
+    results.update({
+        "int8_capacity_ratio": cap_ratio,
+        "int8_num_blocks": n_i8,
+        "int8_prefix_hit_rate": i8_stats["prefix_hit_rate"],
+        "int8_on_tok_s": ptokens / t_pfx_i8,
+        "int8_first_token_match": sum(firsts) / len(firsts),
+        "int8_greedy_match_frac": matched / total,
     })
 
     t_accel = t_mig = None
@@ -472,6 +530,13 @@ def main(argv=None) -> int:
          f"(off={results['prefix_peak_active_off']}) "
          f"cow={results['prefix_cow_forks']} "
          f"ttft_p50={results['prefix_ttft_p50_s'] * 1e3:.0f}ms")
+    emit("serve_cb/prefix_int8", t_pfx_i8 * 1e6 / ptokens,
+         f"{results['int8_on_tok_s']:.1f}tok/s "
+         f"capacity={results['int8_capacity_ratio']:.2f}x "
+         f"({results['int8_num_blocks']}blk vs {n_pblocks}) "
+         f"hit_rate={results['int8_prefix_hit_rate']:.2f} "
+         f"first_tok_match={results['int8_first_token_match']:.2f} "
+         f"greedy_match={results['int8_greedy_match_frac']:.2f}")
     if t_accel is not None:
         emit("serve_cb/accel", t_accel * 1e6 / tokens,
              f"{results['accel_cb_tok_s']:.1f}tok/s pallas")

@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the ACCEL target + pure-jnp oracles.
+
+One module per kernel (flash_attention, gqa_decode — including the
+block-table-aware paged decode and its int8-dequantising variant,
+rmsnorm, moe_gmm, ssd_scan, ...), `ops.py` for the jit-wrapped
+model-facing entry points (GQA grouping, lane padding, interpret-mode
+resolution via `REPRO_PALLAS_INTERPRET`), and `ref.py` for the
+reference oracles every kernel is tested against.  On CPU-only hosts
+the kernels run in `interpret=True` mode, so CI exercises the same
+code paths without TPU hardware.
+"""

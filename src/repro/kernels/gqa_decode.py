@@ -13,9 +13,15 @@ materialising the gathered per-row cache.  The current token's K/V is
 passed explicitly and folded into the online softmax on the final block
 (write-then-attend: the pool contributes positions ``< length`` only).
 
+``paged_gqa_decode_int8`` streams an int8 pool plus its parallel
+per-token f32 scale planes through the same block table and
+dequantises in-kernel (one broadcast multiply in VMEM) — the pool is
+never materialised at full precision.
+
 These are the ACCEL variants of the decode hot function (the serve-path
 analogue of the paper's hardware kernel); oracles:
-``ref.decode_attention_ref`` / ``ref.paged_decode_attention_ref``.
+``ref.decode_attention_ref`` / ``ref.paged_decode_attention_ref`` /
+``ref.paged_decode_attention_int8_ref``.
 """
 from __future__ import annotations
 
@@ -111,14 +117,15 @@ def gqa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 # ------------------------------------------------------------ paged variant
 
-def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
-                  o_ref, m_scr, l_scr, acc_scr, *, block_size: int,
-                  nbt: int, scale: float):
-    """One (row, kv-head, logical-block) grid step.
+def _paged_accumulate(q_ref, len_ref, kn_ref, vn_ref, o_ref, m_scr, l_scr,
+                      acc_scr, k, v, *, block_size: int, nbt: int,
+                      scale: float):
+    """Shared online-softmax body of the paged decode kernels.
 
-    The BlockSpec index map already resolved ``tbl_ref[b, j]`` to the
-    physical block, so ``k_ref``/``v_ref`` hold that block's
-    (block_size, hd) plane; the kernel only masks and accumulates.
+    ``k``/``v`` are this grid step's already-dequantised (block_size, hd)
+    f32 planes — the f32 kernel passes the block verbatim, the int8
+    kernel multiplies the streamed scale plane in first.  Keeping one
+    body guarantees the two variants differ ONLY in the dequantise step.
     """
     b = pl.program_id(0)
     j = pl.program_id(2)
@@ -130,8 +137,6 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
-    k = k_ref[0, :, 0].astype(jnp.float32)            # (bs, hd)
-    v = v_ref[0, :, 0].astype(jnp.float32)
     live = len_ref[b]                                 # pool valid on [0, live)
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -163,6 +168,40 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
         l_fin = l_scr[...] * corr + p_cur
         acc = acc_scr[...] * corr + p_cur * vn
         o_ref[0, 0] = (acc / jnp.maximum(l_fin, 1e-20)).astype(o_ref.dtype)
+
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *, block_size: int,
+                  nbt: int, scale: float):
+    """One (row, kv-head, logical-block) grid step.
+
+    The BlockSpec index map already resolved ``tbl_ref[b, j]`` to the
+    physical block, so ``k_ref``/``v_ref`` hold that block's
+    (block_size, hd) plane; the kernel only masks and accumulates.
+    """
+    del tbl_ref
+    _paged_accumulate(q_ref, len_ref, kn_ref, vn_ref, o_ref, m_scr, l_scr,
+                      acc_scr,
+                      k_ref[0, :, 0].astype(jnp.float32),
+                      v_ref[0, :, 0].astype(jnp.float32),
+                      block_size=block_size, nbt=nbt, scale=scale)
+
+
+def _paged_int8_kernel(tbl_ref, len_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                       kn_ref, vn_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                       block_size: int, nbt: int, scale: float):
+    """Int8-dequantising variant: the pool blocks arrive as int8 with a
+    parallel (block_size, 1) f32 scale plane streamed through the SAME
+    block-table index map; dequantisation is one broadcast multiply in
+    VMEM, then the shared online-softmax body runs unchanged.  The
+    current token's ``kn``/``vn`` stay full precision (not yet pooled).
+    """
+    del tbl_ref
+    _paged_accumulate(q_ref, len_ref, kn_ref, vn_ref, o_ref, m_scr, l_scr,
+                      acc_scr,
+                      k_ref[0, :, 0].astype(jnp.float32) * ks_ref[0, :, 0],
+                      v_ref[0, :, 0].astype(jnp.float32) * vs_ref[0, :, 0],
+                      block_size=block_size, nbt=nbt, scale=scale)
 
 
 def paged_gqa_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
@@ -212,3 +251,57 @@ def paged_gqa_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         interpret=interpret,
     )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
       q, k_pages, v_pages, k_new, v_new)
+
+
+def paged_gqa_decode_int8(q: jax.Array, k_pages: jax.Array,
+                          k_scale: jax.Array, v_pages: jax.Array,
+                          v_scale: jax.Array, k_new: jax.Array,
+                          v_new: jax.Array, tables: jax.Array,
+                          lengths: jax.Array, *, interpret: bool = False
+                          ) -> jax.Array:
+    """``paged_gqa_decode`` over an int8 pool with per-token scales.
+
+    k_pages/v_pages: (NP, BS, KV, hd) int8; k_scale/v_scale:
+    (NP, BS, KV, 1) f32 — symmetric per-(token, kv-head) scales written
+    alongside each quantised token.  The scale planes ride the SAME
+    scalar-prefetched block table as the int8 blocks, so each grid step
+    DMAs one (BS, hd) int8 plane plus its (BS, 1) scales and
+    dequantises in VMEM — no materialised f32 pool anywhere.  q and the
+    current token's k_new/v_new stay full precision.
+    """
+    B, KV, G, hd = q.shape
+    block_size = k_pages.shape[1]
+    nbt = tables.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(_paged_int8_kernel, block_size=block_size,
+                               nbt=nbt, scale=scale)
+    page_spec = pl.BlockSpec((1, block_size, 1, hd),
+                             lambda b, h, j, t, n: (t[b, j], 0, h, 0))
+    scale_spec = pl.BlockSpec((1, block_size, 1, 1),
+                              lambda b, h, j, t, n: (t[b, j], 0, h, 0))
+    tok_spec = pl.BlockSpec((1, 1, 1, hd), lambda b, h, j, t, n: (b, h, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                # tables, lengths
+        grid=(B, KV, nbt),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, t, n: (b, h, 0, 0)),
+            page_spec, scale_spec, page_spec, scale_spec,
+            tok_spec, tok_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, t, n: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, k_scale.astype(jnp.float32),
+      v_pages, v_scale.astype(jnp.float32), k_new, v_new)

@@ -231,7 +231,7 @@ def _kv_grouping(Hp: int, KV: int, kv_index: tuple | None):
 
 
 def _paged_decode_common(q, k_pages, v_pages, k_new, v_new, tables, index,
-                         kv_index, interpret):
+                         kv_index, interpret, k_scale=None, v_scale=None):
     B, _, Hp, hd = q.shape
     KV = k_pages.shape[2]
     kvmap, pos, qhead_for, _ = _kv_grouping(Hp, KV, kv_index)
@@ -253,6 +253,8 @@ def _paged_decode_common(q, k_pages, v_pages, k_new, v_new, tables, index,
         # legacy unaligned pool on native TPU lanes: pad hd — this pads
         # the WHOLE pool per call; production TPU deployments should
         # allocate the pool lane-aligned so this branch never fires
+        # (zero int8 lanes dequantise to exact 0, so the scale planes
+        # themselves never need padding — their trailing dim is 1)
         qg, kn, vn = (_pad_lanes(a, -1) for a in (qg, kn, vn))
         k_pages = _pad_lanes(k_pages, -1)
         v_pages = _pad_lanes(v_pages, -1)
@@ -263,9 +265,15 @@ def _paged_decode_common(q, k_pages, v_pages, k_new, v_new, tables, index,
         qg = qg * jnp.asarray(np.sqrt(qg.shape[-1] / hd), qg.dtype)
     idx = index.astype(jnp.int32)
     idx = jnp.broadcast_to(idx.reshape(-1) if idx.ndim else idx, (B,))
-    out = _gd.paged_gqa_decode(qg, k_pages, v_pages, kn, vn,
-                               tables.astype(jnp.int32), idx,
-                               interpret=interp)
+    if k_scale is not None:
+        out = _gd.paged_gqa_decode_int8(qg, k_pages, k_scale, v_pages,
+                                        v_scale, kn, vn,
+                                        tables.astype(jnp.int32), idx,
+                                        interpret=interp)
+    else:
+        out = _gd.paged_gqa_decode(qg, k_pages, v_pages, kn, vn,
+                                   tables.astype(jnp.int32), idx,
+                                   interpret=interp)
     return out[:, kvmap, pos][..., :hd][:, None]     # (B, 1, Hp, hd)
 
 
@@ -284,6 +292,25 @@ def paged_gqa_decode(q, k_pages, v_pages, k_new, v_new, tables, index, *,
     """
     return _paged_decode_common(q, k_pages, v_pages, k_new, v_new,
                                 tables, index, kv_index, interpret)
+
+
+@_with_env_interpret
+@functools.partial(jax.jit, static_argnames=("kv_index", "interpret"))
+def paged_gqa_decode_int8(q, k_pages, k_scale, v_pages, v_scale, k_new,
+                          v_new, tables, index, *,
+                          kv_index: tuple | None = None,
+                          interpret: bool | None = None):
+    """Model-facing paged decode over an int8 block pool with scales.
+
+    Same ABI as ``paged_gqa_decode`` plus the parallel scale pools:
+    k_pages/v_pages are (NP,BS,KV,hd) int8 and k_scale/v_scale are
+    (NP,BS,KV,1) f32 symmetric per-(token, kv-head) scales.  The kernel
+    streams block AND scale planes through the scalar-prefetched table
+    and dequantises in VMEM — int8 no longer falls back to XLA math.
+    """
+    return _paged_decode_common(q, k_pages, v_pages, k_new, v_new,
+                                tables, index, kv_index, interpret,
+                                k_scale=k_scale, v_scale=v_scale)
 
 
 @_with_env_interpret

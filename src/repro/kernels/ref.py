@@ -125,3 +125,20 @@ def paged_decode_attention_ref(q, k_pages, v_pages, k_new, v_new, tables,
     denom = jnp.sum(p, axis=-1, keepdims=True) + p_cur
     out = jnp.einsum("bhgk,bkhd->bhgd", (p / denom).astype(q.dtype), vc)
     return out + (p_cur / denom).astype(q.dtype) * v_new
+
+
+def paged_decode_attention_int8_ref(q, k_pages, k_scale, v_pages, v_scale,
+                                    k_new, v_new, tables, lengths):
+    """Oracle for the int8-dequantising paged decode kernel.
+
+    k_pages/v_pages: (NP,BS,KV,hd) int8 with symmetric per-(token,
+    kv-head) f32 scales k_scale/v_scale (NP,BS,KV,1).  Dequantises the
+    WHOLE pool to f32 up front — the materialised computation the
+    kernel's streamed in-VMEM multiply replaces — then runs the shared
+    gather-then-attend reference.  k_new/v_new stay full precision.
+    """
+    kp = k_pages.astype(jnp.float32) * k_scale.astype(jnp.float32)
+    vp = v_pages.astype(jnp.float32) * v_scale.astype(jnp.float32)
+    return paged_decode_attention_ref(q, kp.astype(q.dtype),
+                                      vp.astype(q.dtype), k_new, v_new,
+                                      tables, lengths)

@@ -233,19 +233,49 @@ def init_paged_kv_cache(num_layers: int, num_blocks: int, block_size: int,
     kernels would compile natively (``not interpret``), and keeps the
     historical unpadded layout in interpret mode so CI behaviour — and
     CI memory — is unchanged.
+
+    ``dtype="int8"`` stores the pool quantised with parallel f32 scale
+    pools (``k_scale``/``v_scale``, same block structure, trailing dim 1)
+    at per-(token, kv-head) granularity: every write quantises its own
+    token independently (symmetric, round-to-nearest-even over
+    ``head_dim``), so decode appends never re-scale a block's existing
+    tokens and a COW fork copies scales the same way it copies blocks.
+    At equal bytes an int8+scales pool holds ``~4*hd/(hd+4)`` as many
+    blocks as f32 (~3.5x at hd=32, ~2x vs bf16); see
+    ``paged_kv_block_bytes``.
     """
-    if dtype == "int8":
-        raise NotImplementedError(
-            "paged KV does not support int8 cache quantization yet "
-            "(per-block scales need their own pool)")
     if lane_align is None:
         from repro.kernels.ops import _interpret
         lane_align = not _interpret(None)
     hd_alloc = (head_dim + (-head_dim) % LANE_WIDTH if lane_align
                 else head_dim)
     shape = (num_layers, num_blocks, block_size, num_kv_heads, hd_alloc)
+    if dtype == "int8":
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+            "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+        }
     dt = jnp.dtype(dtype)
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def paged_kv_block_bytes(block_size: int, num_kv_heads: int, head_dim: int,
+                         dtype: str, lane_align: bool = False) -> int:
+    """Bytes one physical KV block occupies (k + v + any scale pools).
+
+    The equal-KV-bytes currency for capacity planning: at a fixed byte
+    budget an int8 pool allocates ``budget // paged_kv_block_bytes``
+    blocks — ~3.5x the f32 count at hd=32 (int8 pays 1 byte/element
+    plus 4 bytes per (token, head) for the scale) — which is what
+    ``PagedSlotManager.can_admit`` sees as extra admission headroom.
+    """
+    hd = (head_dim + (-head_dim) % LANE_WIDTH if lane_align else head_dim)
+    per_pos = 2 * num_kv_heads * hd          # k + v elements per position
+    if dtype == "int8":
+        return block_size * (per_pos + 2 * num_kv_heads * 4)
+    return block_size * per_pos * jnp.dtype(dtype).itemsize
 
 
 def cache_specs(rules, int8: bool) -> dict:
@@ -357,7 +387,8 @@ def decode_attention(q, k_cache, v_cache, index: jax.Array,
 def paged_decode_attention(q, k_pages, v_pages, table, index: jax.Array,
                            k_new, v_new,
                            kv_index: np.ndarray | None = None,
-                           backend: str = "xla") -> jax.Array:
+                           backend: str = "xla",
+                           k_scale=None, v_scale=None) -> jax.Array:
     """Single-token attention over one layer of a paged (block-pool) cache.
 
     q: (B,1,Hp,hd); k_pages/v_pages: (NP,BS,KV,hd) physical blocks;
@@ -367,6 +398,12 @@ def paged_decode_attention(q, k_pages, v_pages, table, index: jax.Array,
     ``k_new/v_new`` (B,1,KV,hd) is folded in explicitly
     (write-then-attend, as in ``decode_attention``).
 
+    With ``k_scale``/``v_scale`` (NP,BS,KV,1) f32 given the pool is
+    int8 (see ``init_paged_kv_cache``): HOST dequantises the gathered
+    rows before attending, ACCEL streams blocks + scales through the
+    int8 kernel and dequantises in VMEM — same math, so greedy tokens
+    agree across targets within the documented int8 tolerance.
+
     backend="xla" gathers the row's blocks into logical order and reuses
     ``decode_attention`` (the HOST reference — one materialised
     (B, NBT*BS, KV, hd) cache per call); backend="pallas" streams the
@@ -375,6 +412,10 @@ def paged_decode_attention(q, k_pages, v_pages, table, index: jax.Array,
     """
     if backend == "pallas":
         from repro.kernels import ops as kernel_ops
+        if k_scale is not None:
+            return kernel_ops.paged_gqa_decode_int8(
+                q, k_pages, k_scale, v_pages, v_scale, k_new, v_new,
+                table, index, kv_index=_static_kv_index(kv_index))
         return kernel_ops.paged_gqa_decode(
             q, k_pages, v_pages, k_new, v_new, table, index,
             kv_index=_static_kv_index(kv_index))
@@ -384,6 +425,13 @@ def paged_decode_attention(q, k_pages, v_pages, table, index: jax.Array,
     BS = k_pages.shape[1]
     rows_k = jnp.take(k_pages, table, axis=0)         # (B, NBT, BS, KV, hdp)
     rows_v = jnp.take(v_pages, table, axis=0)
+    if k_scale is not None:
+        # int8 pool: gather the per-token scales the same way and
+        # dequantise only the (small) gathered rows, never the pool
+        rows_k = (rows_k.astype(jnp.float32)
+                  * jnp.take(k_scale, table, axis=0)).astype(q.dtype)
+        rows_v = (rows_v.astype(jnp.float32)
+                  * jnp.take(v_scale, table, axis=0)).astype(q.dtype)
     if rows_k.shape[-1] != hd:
         # lane-aligned pool (hd padded to 128 at allocation): the padded
         # tail is all-zero; slice AFTER the gather so only the (small)
@@ -399,7 +447,8 @@ def paged_decode_attention(q, k_pages, v_pages, table, index: jax.Array,
 def paged_prefill_attention(q, k_pages, v_pages, table, offset, length,
                             k_new, v_new,
                             kv_index: np.ndarray | None = None,
-                            backend: str = "xla") -> jax.Array:
+                            backend: str = "xla",
+                            k_scale=None, v_scale=None) -> jax.Array:
     """Chunked-prefill attention: a multi-token chunk extends a prefix
     already resident in a paged cache (prefix caching's partial prefill).
 
@@ -416,6 +465,11 @@ def paged_prefill_attention(q, k_pages, v_pages, table, offset, length,
     as the bucketed dense prefill).  Fully-masked PADDING query rows
     come out as garbage-but-finite values; callers never read them.
 
+    With ``k_scale``/``v_scale`` (NP,BS,KV,1) given the pool is int8:
+    the gathered context rows are dequantised (scale multiply, f32)
+    before the chunk attends over them — the chunk's own ``k_new/v_new``
+    stay full precision.
+
     There is no Pallas chunk-prefill kernel yet, so BOTH targets run
     this XLA gather reference (identical math; decode still swaps real
     kernels per target).
@@ -426,6 +480,11 @@ def paged_prefill_attention(q, k_pages, v_pages, table, offset, length,
     BS = k_pages.shape[1]
     rows_k = jnp.take(k_pages, table, axis=0)         # (B, NBT, BS, KV, hdp)
     rows_v = jnp.take(v_pages, table, axis=0)
+    if k_scale is not None:
+        rows_k = (rows_k.astype(jnp.float32)
+                  * jnp.take(k_scale, table, axis=0)).astype(q.dtype)
+        rows_v = (rows_v.astype(jnp.float32)
+                  * jnp.take(v_scale, table, axis=0)).astype(q.dtype)
     if rows_k.shape[-1] != hd:
         rows_k = rows_k[..., :hd]                     # lane-aligned pool
         rows_v = rows_v[..., :hd]

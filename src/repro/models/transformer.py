@@ -419,8 +419,9 @@ def forward(params, batch, cfg: ModelConfig, geom: Geometry, mesh, *,
     carries a ``block_table`` — a paged (L,NB,BS,KV,hd) block pool.
     ``backend`` selects the attention implementation for prefill/decode:
     "xla" (HOST reference) or "pallas" (ACCEL kernels — flash prefill,
-    flash-decoding / paged-streaming decode).  int8 decode ignores it
-    (no dequantising Pallas kernel yet).
+    flash-decoding / paged-streaming decode).  A paged int8 pool keeps
+    the selector (its ACCEL build is the int8-dequantising paged
+    kernel); DENSE int8 decode still ignores it and runs XLA math.
     Returns (logits, new_cache_or_None, aux_loss).
     """
     x = embed_inputs(params, batch, cfg)
@@ -572,26 +573,55 @@ def _forward_decode_paged(params, batch, cfg, geom, mesh, cache, x, positions,
     per layer (HOST); backend="pallas" hands the pool plus the block
     table to the paged decode kernel, which streams the blocks in-kernel
     with no materialised gather (ACCEL).
+
+    An int8 pool (``"k_scale" in cache``) quantises on write — each
+    token independently, symmetric over head_dim — scattering q values
+    and scales into their parallel pools, and attends over the raw int8
+    pool plus scales (HOST dequantises the gathered rows; ACCEL
+    dequantises in-kernel).  The current token still enters attention
+    at full precision (write-then-attend: it is not read back from the
+    pool this step).
     """
     cache_index = batch["index"]                   # (B,)
     table = batch["block_table"]                   # (B, NBT) int32
     bs = cache["k"].shape[2]
+    int8 = "k_scale" in cache
     kv_idx = kv_index_for(cfg, geom)
     blk = jnp.take_along_axis(table, (cache_index // bs)[:, None],
                               axis=1)[:, 0]        # (B,) physical block
     off = cache_index % bs
+    from repro.models.common import quantize_int8
 
     def body(carry, lp):
-        x, ck, cv, li, aux = carry
+        if int8:
+            x, ck, cv, ks, vs, li, aux = carry
+        else:
+            x, ck, cv, li, aux = carry
         xn = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         q, k, v = qkv_project(xn, lp, cfg, geom, positions)
         kcp = jax.lax.dynamic_index_in_dim(ck, li, 0, keepdims=False)
         vcp = jax.lax.dynamic_index_in_dim(cv, li, 0, keepdims=False)
-        out = attn_lib.paged_decode_attention(
-            q, kcp.astype(x.dtype), vcp.astype(x.dtype), table, cache_index,
-            k_new=k, v_new=v, kv_index=kv_idx, backend=backend)
-        ck = _write_kv_block(ck, k, li, blk, off)
-        cv = _write_kv_block(cv, v, li, blk, off)
+        if int8:
+            out = attn_lib.paged_decode_attention(
+                q, kcp, vcp, table, cache_index, k_new=k, v_new=v,
+                kv_index=kv_idx, backend=backend,
+                k_scale=jax.lax.dynamic_index_in_dim(ks, li, 0,
+                                                     keepdims=False),
+                v_scale=jax.lax.dynamic_index_in_dim(vs, li, 0,
+                                                     keepdims=False))
+            kq, ksc = quantize_int8(k, axis=-1)
+            vq, vsc = quantize_int8(v, axis=-1)
+            ck = _write_kv_block(ck, kq, li, blk, off)
+            cv = _write_kv_block(cv, vq, li, blk, off)
+            ks = _write_kv_block(ks, ksc, li, blk, off)
+            vs = _write_kv_block(vs, vsc, li, blk, off)
+        else:
+            out = attn_lib.paged_decode_attention(
+                q, kcp.astype(x.dtype), vcp.astype(x.dtype), table,
+                cache_index, k_new=k, v_new=v, kv_index=kv_idx,
+                backend=backend)
+            ck = _write_kv_block(ck, k, li, blk, off)
+            cv = _write_kv_block(cv, v, li, blk, off)
         x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
         if cfg.family == "moe":
             h, a = moe_block(rmsnorm(x, lp["ln2"], cfg.norm_eps), lp,
@@ -599,13 +629,24 @@ def _forward_decode_paged(params, batch, cfg, geom, mesh, cache, x, positions,
         else:
             h = dense_mlp_block(rmsnorm(x, lp["ln2"], cfg.norm_eps), lp, cfg)
             a = jnp.zeros((), jnp.float32)
+        if int8:
+            return (x + h, ck, cv, ks, vs, li + 1, aux + a), None
         return (x + h, ck, cv, li + 1, aux + a), None
 
-    (x, ck, cv, _, aux), _ = jax.lax.scan(
-        body,
-        (x, cache["k"], cache["v"], jnp.int32(0), jnp.zeros((), jnp.float32)),
-        params["layers"])
-    new_cache = dict(cache, k=ck, v=cv)
+    if int8:
+        (x, ck, cv, ks, vs, _, aux), _ = jax.lax.scan(
+            body,
+            (x, cache["k"], cache["v"], cache["k_scale"], cache["v_scale"],
+             jnp.int32(0), jnp.zeros((), jnp.float32)),
+            params["layers"])
+        new_cache = dict(cache, k=ck, v=cv, k_scale=ks, v_scale=vs)
+    else:
+        (x, ck, cv, _, aux), _ = jax.lax.scan(
+            body,
+            (x, cache["k"], cache["v"], jnp.int32(0),
+             jnp.zeros((), jnp.float32)),
+            params["layers"])
+        new_cache = dict(cache, k=ck, v=cv)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return output_logits(params, x, cfg), new_cache, aux
 
@@ -631,6 +672,13 @@ def forward_prefill_paged(params, batch, cfg, geom, mesh, cache,
     aux).  With ``offset == 0`` (no cache hit) this degenerates to the
     bucketed dense prefill bit-for-bit: every pool column is masked
     (exact-zero softmax terms), and positions/causality match.
+
+    An int8 pool (``"k_scale" in cache``) dequantises the gathered
+    context per layer and the returned chunk cache is quantised
+    (``{"k","v","k_scale","v_scale"}``) so the engine's scatter writes
+    pool-dtype leaves — note the chunk attends over ROUNDED prefix KV,
+    which is exactly why lossy pools sit behind
+    ``allow_lossy_prefix_cache`` (serve/README.md tolerance story).
     """
     x = embed_inputs(params, batch, cfg)
     B, W = x.shape[0], x.shape[1]
@@ -639,15 +687,20 @@ def forward_prefill_paged(params, batch, cfg, geom, mesh, cache,
     table = batch["block_table"]                       # (B, NBT)
     positions = offset[:, None] + jnp.arange(W)[None, :]
     kv_idx = kv_index_for(cfg, geom)
+    int8 = "k_scale" in cache
 
     def body(x_aux, xs):
         x, aux = x_aux
-        lp, kcp, vcp = xs
+        if int8:
+            lp, kcp, vcp, kscp, vscp = xs
+        else:
+            lp, kcp, vcp = xs
+            kscp = vscp = None
         xn = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         q, k, v = qkv_project(xn, lp, cfg, geom, positions)
         out = attn_lib.paged_prefill_attention(
             q, kcp, vcp, table, offset, length, k_new=k, v_new=v,
-            kv_index=kv_idx, backend=backend)
+            kv_index=kv_idx, backend=backend, k_scale=kscp, v_scale=vscp)
         x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
         if cfg.family == "moe":
             h, a = moe_block(rmsnorm(x, lp["ln2"], cfg.norm_eps), lp,
@@ -657,11 +710,18 @@ def forward_prefill_paged(params, batch, cfg, geom, mesh, cache,
             a = jnp.zeros((), jnp.float32)
         return (x + h, aux + a), (k, v)
 
-    (x, aux), kvs = jax.lax.scan(
-        body, (x, jnp.zeros((), jnp.float32)),
-        (params["layers"], cache["k"], cache["v"]))
+    xs = ((params["layers"], cache["k"], cache["v"],
+           cache["k_scale"], cache["v_scale"]) if int8
+          else (params["layers"], cache["k"], cache["v"]))
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
     k_all, v_all = kvs                                  # (L, B, W, KV, hd)
-    cdt = jnp.dtype(cfg.kv_cache_dtype)
-    chunk_cache = {"k": k_all.astype(cdt), "v": v_all.astype(cdt)}
+    if cfg.kv_cache_dtype == "int8":
+        from repro.models.common import quantize_int8
+        kq, ks = quantize_int8(k_all, axis=-1)
+        vq, vs = quantize_int8(v_all, axis=-1)
+        chunk_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    else:
+        cdt = jnp.dtype(cfg.kv_cache_dtype)
+        chunk_cache = {"k": k_all.astype(cdt), "v": v_all.astype(cdt)}
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return output_logits(params, x, cfg), chunk_cache, aux

@@ -1,3 +1,13 @@
+"""Serving engines and the v2 request API.
+
+`ServeEngine` is the synchronous baseline; `ContinuousBatchingEngine`
+serves ragged arrival streams with dense or paged (block-table) KV,
+optional content-addressed prefix caching and int8 quantised pools,
+dispatching every step through the Xar-Trek runtime so scheduling
+policies migrate prefill/decode between HOST and ACCEL builds.
+`ClusterFrontEnd` runs N engine workers behind one central scheduler.
+See README.md in this package for the full design.
+"""
 from repro.serve.api import (
     GenerationRequest, RequestHandle, RequestOutput, SamplingParams,
 )

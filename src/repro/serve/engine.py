@@ -162,6 +162,27 @@ def prompt_bucket(n: int, min_bucket: int = 8) -> int:
     return b
 
 
+# cache dtypes that represent every value of the compute dtype exactly
+# (f32 is a strict superset of bf16/f16; same-dtype is trivially exact)
+_KV_WIDENING = {("bfloat16", "float32"), ("float16", "float32")}
+
+
+def kv_cache_lossless(cfg) -> bool:
+    """True when storing compute-dtype KV in ``kv_cache_dtype`` is exact.
+
+    The byte-identity invariant (greedy tokens bitwise equal cache-on vs
+    cache-off, across HOST/ACCEL/migration/preempt-resume) holds only
+    for lossless pools: a lossy pool makes cache-on read ROUNDED prefix
+    KV where cache-off attends the in-flight full-precision values.
+    int8 is always lossy; a narrower float pool (f32 compute over bf16
+    cache) is too.
+    """
+    kv = cfg.kv_cache_dtype
+    if kv == "int8":
+        return False
+    return kv == cfg.dtype or (cfg.dtype, kv) in _KV_WIDENING
+
+
 class ContinuousBatchingEngine:
     """Slot-based continuous batching over one shared KV cache.
 
@@ -219,7 +240,12 @@ class ContinuousBatchingEngine:
     them for free.  Greedy output is byte-identical cache-on vs
     cache-off on both backends (the cached KV is bitwise what a fresh
     prefill would recompute, and masked junk positions contribute exact
-    zeros).
+    zeros) — PROVIDED the pool dtype is lossless w.r.t. compute
+    (``kv_cache_lossless``).  A lossy pool (int8, or f32 compute over a
+    bf16 pool) raises at construction unless
+    ``allow_lossy_prefix_cache=True`` explicitly opts into
+    tolerance-level agreement (serve/README.md documents the int8
+    tolerance story).
 
     A request whose ``stop_tokens`` fires finishes that step: its slot —
     and, under paging, its blocks — frees immediately for queued
@@ -244,9 +270,9 @@ class ContinuousBatchingEngine:
     ``PinAccel`` pin the direct (no-runtime) path to the XLA / Pallas
     build; every other policy (``XarTrekHeuristic``,
     ``LatencyAwarePolicy``, custom) needs a ``runtime`` — the engine
-    installs the policy on the runtime's scheduler server.  int8 KV
-    caches have no Pallas dequantising decode yet, so their ACCEL
-    variant stays on XLA math.
+    installs the policy on the runtime's scheduler server.  Paged int8
+    KV runs a real ACCEL build (the int8-dequantising paged kernel);
+    only DENSE int8 still pins its ACCEL variant to XLA math.
 
     **Signals.**  Each loop iteration the engine publishes a
     ``LoadSignals`` snapshot (queue depth, active slots, free-KV
@@ -277,6 +303,7 @@ class ContinuousBatchingEngine:
                  paged: bool = False, block_size: int = 32,
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = False,
+                 allow_lossy_prefix_cache: bool = False,
                  lane_align: Optional[bool] = None,
                  policy: Optional[SchedulingPolicy] = None,
                  backend: str = "auto", eager_accel: bool = True,
@@ -290,12 +317,20 @@ class ContinuousBatchingEngine:
             raise NotImplementedError(
                 f"continuous batching needs a per-row-seekable KV cache "
                 f"and row-independent math; family {cfg.family!r} is not")
-        if paged and cfg.kv_cache_dtype == "int8":
-            raise NotImplementedError(
-                "paged KV does not support int8 cache quantization yet")
         if prefix_cache and not paged:
             raise ValueError("prefix_cache=True requires paged=True "
                              "(sharing happens at block granularity)")
+        if prefix_cache and not allow_lossy_prefix_cache \
+                and not kv_cache_lossless(cfg):
+            raise ValueError(
+                f"prefix_cache=True with lossy kv_cache_dtype="
+                f"{cfg.kv_cache_dtype!r} (compute {cfg.dtype!r}) breaks "
+                f"the byte-identity invariant: cache-on reads ROUNDED "
+                f"prefix KV where cache-off attends full precision.  "
+                f"Pass allow_lossy_prefix_cache=True to accept "
+                f"tolerance-level (not bitwise) agreement — see "
+                f"serve/README.md 'Prefix caching' for the int8 "
+                f"tolerance story")
         if backend not in ("host", "accel", "auto"):
             raise ValueError(f"backend must be host|accel|auto: {backend!r}")
         if backend != "auto":
@@ -555,10 +590,13 @@ class ContinuousBatchingEngine:
 
         # HOST keeps the XLA reference; ACCEL is a genuinely different
         # build on the Pallas kernels (same ABI, checked at prepare) —
-        # except int8 caches, whose dequantising kernel doesn't exist
-        # yet, and PinHost, which pins both variants to XLA
+        # except DENSE int8 caches (the dequantising kernel is paged-
+        # only) and PinHost, which pins both variants to XLA.  Paged
+        # int8 gets the real kernel: blocks + scale planes streamed
+        # through the block table, dequantised in VMEM.
         accel_impl = ("pallas" if (not isinstance(self.policy, PinHost)
-                                   and self.cfg.kv_cache_dtype != "int8")
+                                   and (self.cfg.kv_cache_dtype != "int8"
+                                        or self.paged))
                       else "xla")
         host_prefill, host_decode = step_fns("xla")
         if accel_impl == "pallas":

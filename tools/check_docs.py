@@ -1,0 +1,101 @@
+"""Docs CI gate: intra-repo markdown links must resolve and every
+public ``repro.serve`` / ``repro.kernels`` module must carry a module
+docstring.
+
+Pure stdlib + AST — no imports of repro itself, so the check runs in
+the lint environment without jax installed.
+
+    python tools/check_docs.py          # from the repo root
+
+Exit 0 when clean; exit 1 listing every broken link / missing
+docstring otherwise.
+
+Link check scope: every ``*.md`` tracked in the repo (skipping
+hidden/vendored dirs).  A link counts as intra-repo when it is not a
+URL (``scheme://``), mailto, or pure ``#fragment``; it must resolve —
+relative to the file that contains it, or to the repo root for
+``/``-prefixed paths — to an existing file or directory.  Fragments
+are stripped (heading anchors are not verified).  Bare-code spans and
+fenced code blocks are ignored.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCSTRING_PACKAGES = ("src/repro/serve", "src/repro/kernels")
+SKIP_DIRS = {".git", ".github", "__pycache__", ".venv", "node_modules",
+             "artifacts"}
+
+# [text](target) — excluding images' leading ! is unnecessary: image
+# targets must resolve too
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^(```|~~~)")
+
+
+def iter_markdown(root: pathlib.Path):
+    for p in sorted(root.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in p.relative_to(root).parts):
+            yield p
+
+
+def check_links(root: pathlib.Path) -> list[str]:
+    errors = []
+    for md in iter_markdown(root):
+        in_fence = False
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            if _FENCE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in _LINK.findall(line):
+                if ("://" in target or target.startswith("mailto:")
+                        or target.startswith("#")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                resolved = (root / path.lstrip("/") if path.startswith("/")
+                            else md.parent / path)
+                if not resolved.exists():
+                    errors.append(f"{md.relative_to(root)}:{lineno}: "
+                                  f"broken link -> {target}")
+    return errors
+
+
+def check_docstrings(root: pathlib.Path) -> list[str]:
+    errors = []
+    for pkg in DOCSTRING_PACKAGES:
+        for py in sorted((root / pkg).glob("*.py")):
+            if py.name.startswith("_") and py.name != "__init__.py":
+                continue
+            try:
+                tree = ast.parse(py.read_text())
+            except SyntaxError as e:
+                errors.append(f"{py.relative_to(root)}: unparsable: {e}")
+                continue
+            if not ast.get_docstring(tree):
+                errors.append(f"{py.relative_to(root)}: "
+                              "missing module docstring")
+    return errors
+
+
+def main() -> int:
+    errors = check_links(ROOT) + check_docstrings(ROOT)
+    for e in errors:
+        print(e)
+    n_md = sum(1 for _ in iter_markdown(ROOT))
+    if errors:
+        print(f"\ndocs check FAILED: {len(errors)} problem(s)")
+        return 1
+    print(f"docs check passed ({n_md} markdown files, "
+          f"{len(DOCSTRING_PACKAGES)} docstring-gated packages)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
