@@ -53,7 +53,16 @@ budgets) served three ways on the same model and weights:
     come from exact f32 prefill math) and the full-stream greedy match
     fraction (``floor.json`` bounds ``int8_capacity_ratio``,
     ``int8_prefix_hit_rate``, ``int8_first_token_match`` and
-    ``int8_greedy_match_frac`` from below).
+    ``int8_greedy_match_frac`` from below);
+  * chunked prefill / disaggregation (``--disagg``) — a Zipf
+    long-prompt + short-decode mix served by a mixed fleet with the
+    chunk budget off and on, and by a 1 prefill + 1 decode split (KV
+    spans over the TCP control plane) at equal per-worker KV memory:
+    wall-clock short-request TTFT p99 for all three, the worst
+    single-step decode stall under the budget, and handoff/span counts
+    (``floor.json`` bounds ``disagg_tok_s`` and
+    ``disagg_ttft_p99_improvement`` from below, ``decode_stall_ms``
+    from above).
 
 Emits ``serve_cb/*`` rows; derived carries tok/s for each engine, the
 continuous/synchronous throughput ratio, and the paged engine's peak
@@ -101,6 +110,13 @@ MIGRATE_AT = (4, 10)
 # full KV blocks each (the "same system prompt" multi-tenant shape)
 N_PREFIXES = 4
 PREFIX_BLOCKS = 2
+# disaggregation scenario (--disagg): long "document" prompt width
+# (sized so its monolithic prefill is the widest bucket the engine
+# serves — the head-of-line block the scenario measures) and the
+# per-step chunk budget (= the engines' min_bucket, so every chunk
+# call rides the warmed compile signature)
+DISAGG_LONG = 88
+CHUNK_BUDGET = 8
 
 
 class FlipSchedule:
@@ -221,6 +237,7 @@ def latency_percentiles(outputs: dict) -> dict:
     return {
         "ttft_p50_s": float(np.percentile(ttft, 50)),
         "ttft_p90_s": float(np.percentile(ttft, 90)),
+        "ttft_p99_s": float(np.percentile(ttft, 99)),
         "tpot_p50_s": float(np.percentile(tpot, 50)),
         "tpot_p90_s": float(np.percentile(tpot, 90)),
         "queue_wait_p50_s": float(np.percentile(qw, 50)),
@@ -244,6 +261,12 @@ def main(argv=None) -> int:
                     help="run N engine workers behind one TCP scheduler "
                          "(0 skips; --no-accel also skips it — the "
                          "cluster migrates steps to the Pallas build)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="run the chunked-prefill / disaggregation "
+                         "scenario: a Zipf long-prompt + short-decode "
+                         "mix served by a mixed fleet (chunking off and "
+                         "on) and by a 1 prefill + 1 decode split at "
+                         "equal KV memory")
     ap.add_argument("--json", metavar="PATH",
                     help="write results as JSON (CI artifact)")
     ap.add_argument("--check-floor", metavar="PATH",
@@ -504,6 +527,119 @@ def main(argv=None) -> int:
             "cluster_per_engine": per_engine,
         })
 
+    # chunked prefill + prefill/decode disaggregation: an adversarial
+    # Zipf long-prompt / short-decode mix served three ways at EQUAL
+    # per-worker KV memory — a mixed fleet with chunking off (the
+    # baseline whose monolithic long prefills stall co-resident
+    # decodes), the same fleet with the chunk budget on (bounded
+    # per-step stall, measured), and a 1 prefill + 1 decode split
+    # (spans over the TCP control plane; the interactive class never
+    # shares an engine with a long prefill).  TTFT is wall-clock
+    # submit -> first streamed token, so the disaggregated path pays
+    # for its own serialization and handoff in the number it reports.
+    t_disagg = None
+    if args.disagg:
+        # the scenario sets its own pressure: arrivals must outpace a
+        # monolithic long prefill or least-loaded routing dodges every
+        # head-of-line block and the baseline measures nothing
+        n_d = max(args.n_requests, 18)
+        d_rate = max(args.rate, 80.0)
+        drng = np.random.RandomState(args.seed + 7)
+        specs = []                      # (prompt, n_new, is_long)
+        for i in range(n_d):
+            if i % 3 < 2:               # longs arrive in pairs: one per
+                # mixed worker, so the following short finds BOTH
+                # workers mid-prefill and least-loaded routing can't
+                # dodge the head-of-line block
+                specs.append((drng.randint(0, cfg.vocab_size,
+                                           size=DISAGG_LONG), 4, True))
+            else:                       # interactive short, Zipf decode
+                n_new = int(4 + min(drng.zipf(2.0) * 4, 16))
+                specs.append((drng.randint(0, cfg.vocab_size,
+                                           size=int(drng.randint(4, 9))),
+                              n_new, False))
+        d_arrivals = poisson_arrivals(n_d, d_rate, args.seed + 7)
+        n_dblocks = MAX_SLOTS * MAX_SEQ // BLOCK_SIZE
+
+        def disagg_leg(roles=None, chunk=None, transport="inproc",
+                       prefix="dg"):
+            kw = dict(paged=True, block_size=BLOCK_SIZE,
+                      num_blocks=n_dblocks)
+            if roles is not None:
+                kw["roles"] = roles
+            if chunk is not None:
+                kw["prefill_tokens_per_step"] = chunk
+            fe = ClusterFrontEnd(cfg, n_engines=2, policy="xartrek",
+                                 transport=transport, params=sync.params,
+                                 max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
+                                 worker_prefix=prefix, **kw)
+            ttft, rids = {}, []
+            with fe:
+                fe.warmup()
+                # compile the long-prompt path (monolithic bucket or
+                # span tier) outside the measured window — on EVERY
+                # decode-capable worker, not just the least-loaded one
+                long_warm = np.arange(1, DISAGG_LONG + 1,
+                                      dtype=np.int32) % cfg.vocab_size
+                if roles is None:
+                    warm_h = [w.submit(GenerationRequest(
+                        long_warm, max_new_tokens=2))
+                        for w in fe.workers]
+                    for h in warm_h:
+                        h.result(timeout=120)
+                else:
+                    fe.submit(GenerationRequest(long_warm,
+                                                max_new_tokens=2))
+                    fe.drain()
+                for w in fe.workers:
+                    w.engine.reset_stats()
+                t0 = time.perf_counter()
+                for (prompt, n_new, _), arr in zip(specs, d_arrivals):
+                    now = time.perf_counter() - t0
+                    if arr > now:
+                        time.sleep(arr - now)
+                    req = GenerationRequest(prompt, max_new_tokens=n_new)
+                    sub = time.perf_counter()
+
+                    def cb(_tok, rid=req.req_id, sub=sub):
+                        ttft.setdefault(rid, time.perf_counter() - sub)
+                    rids.append(req.req_id)
+                    fe.submit(req, on_token=cb)
+                outs = fe.drain()
+                elapsed = time.perf_counter() - t0
+                summ = fe.summary()
+            tok = sum(o.n_tokens for o in outs.values())
+            short = [ttft[rid] for rid, (_, _, is_long)
+                     in zip(rids, specs) if not is_long]
+            return (tok, elapsed,
+                    float(np.percentile(short, 99)), summ)
+
+        _, _, base_p99, _ = disagg_leg(prefix="db")
+        chk_tok, chk_t, chk_p99, chk_summ = disagg_leg(
+            chunk=CHUNK_BUDGET, prefix="dc")
+        dtokens, t_disagg, dis_p99, dis_summ = disagg_leg(
+            roles=("prefill", "decode"), chunk=CHUNK_BUDGET,
+            transport="tcp", prefix="dd")
+        chunked = chk_summ["chunked_prefill"].values()
+        results.update({
+            "disagg_baseline_ttft_p99_s": base_p99,
+            "chunked_mixed_tok_s": chk_tok / chk_t,
+            "chunked_mixed_ttft_p99_s": chk_p99,
+            # worst single-step decode stall under the chunk budget —
+            # the SLO number floor.json holds a ceiling on
+            "decode_stall_ms": max(
+                v["decode_stall_max_ms"] for v in chunked),
+            "decode_stall_total_ms": sum(
+                v["decode_stall_ms"] for v in chunked),
+            "disagg_tok_s": dtokens / t_disagg,
+            "disagg_ttft_p99_s": dis_p99,
+            "disagg_ttft_p99_improvement": base_p99 / max(dis_p99, 1e-9),
+            "disagg_handoffs": dis_summ["handoffs"],
+            "disagg_spans": sum(
+                v["spans_admitted"]
+                for v in dis_summ["chunked_prefill"].values()),
+        })
+
     util = cb.stats["decode_row_util"] / max(cb.stats["decode_steps"], 1)
     emit("serve_cb/sync", t_sync * 1e6 / tokens,
          f"{results['sync_tok_s']:.1f}tok/s")
@@ -556,6 +692,15 @@ def main(argv=None) -> int:
         emit("serve_cb/cluster", t_cluster * 1e6 / max(ctokens, 1),
              f"{results['cluster_tok_s']:.1f}tok/s n={args.cluster} "
              f"migrations={results['cluster_migrations']} {per_eng}")
+    if t_disagg is not None:
+        emit("serve_cb/disagg", t_disagg * 1e6 / max(dtokens, 1),
+             f"{results['disagg_tok_s']:.1f}tok/s "
+             f"short_ttft_p99={results['disagg_ttft_p99_s'] * 1e3:.0f}ms"
+             f"(mixed={results['disagg_baseline_ttft_p99_s'] * 1e3:.0f}"
+             f"ms chunked={results['chunked_mixed_ttft_p99_s'] * 1e3:.0f}"
+             f"ms) stall_max={results['decode_stall_ms']:.0f}ms "
+             f"handoffs={results['disagg_handoffs']} "
+             f"spans={results['disagg_spans']}")
 
     if args.json:
         with open(args.json, "w") as f:

@@ -140,6 +140,16 @@ class SchedulingPolicy(Protocol):
     the policy's own internal state (a scripted policy may keep a step
     counter) and must never block: it runs under the scheduler server's
     lock on every client request.
+
+    Policies may additionally expose an optional hook
+
+        ``prefill_budget(signals, default) -> Optional[int]``
+
+    consulted by chunked-prefill engines once per scheduler step: return
+    the number of prompt tokens admission may prefill this step (``None``
+    disables chunking for the step — finish monolithically).  Engines
+    fall back to their static ``prefill_tokens_per_step`` when the
+    policy has no hook.
     """
 
     name: str
@@ -236,11 +246,17 @@ class LatencyAwarePolicy:
     pressure it serves on HOST, unless the measured ACCEL step time is
     strictly faster than HOST's (then ACCEL is simply the better
     device and there is no reason to come back).
+
+    When ``prefill_tokens_per_step`` is set the policy also implements
+    the chunked-prefill budget hook: the budget applies only while
+    decodes are actually in flight (``active_slots > 0``) — an idle
+    engine prefills monolithically, since there is nothing to stall.
     """
 
     queue_depth_hi: int = 4
     free_kv_lo: float = 0.125
     ttft_slo_s: Optional[float] = None
+    prefill_tokens_per_step: Optional[int] = None
     name: str = "latency_aware"
 
     def pressured(self, s: LoadSignals) -> bool:
@@ -263,6 +279,13 @@ class LatencyAwarePolicy:
             return Decision(TargetKind.ACCEL)
         # cold kernel: stay on HOST while the bank loads (§3.4)
         return Decision(TargetKind.HOST, reconfigure=not residency.loading)
+
+    def prefill_budget(self, signals: LoadSignals,
+                       default: Optional[int] = None) -> Optional[int]:
+        budget = self.prefill_tokens_per_step or default
+        if budget is None or signals.active_slots == 0:
+            return None        # nothing to stall: prefill monolithically
+        return budget
 
 
 # legacy policy strings -> protocol instances (the scheduler server and

@@ -19,16 +19,20 @@ real co-tenant load").
 Two transports: in-process (default — one JAX process drives the fleet)
 and a line-JSON TCP transport mirroring the paper's socket setup (used
 by the cluster front-end, the multi-process example and tests); the TCP
-protocol carries ``request`` / ``report`` / ``publish`` ops.
+protocol carries ``request`` / ``report`` / ``publish`` / ``handoff``
+ops — ``handoff`` moves a disaggregated prefill's KV span (opaque
+base64 payload) to a registered decode-role sink, so phase handoffs
+ride the same control plane as scheduling decisions.
 """
 from __future__ import annotations
 
+import base64
 import dataclasses
 import json
 import socket
 import socketserver
 import threading
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.core.kernel_bank import KernelBank
 from repro.core.monitor import LoadMonitor
@@ -57,6 +61,10 @@ class SchedulerServer:
         self._owners: dict[str, KernelBank] = {}
         # engine_id -> latest published serve telemetry
         self._published: dict[str, LoadSignals] = {}
+        # dest engine_id -> callable(req_id, payload) consuming a KV
+        # handoff (disaggregation: prefill worker -> decode worker)
+        self._handoff_sinks: dict[str, Callable[[int, bytes], None]] = {}
+        self.handoffs = 0
 
     # ------------------------------------------------------------- policy
     @property
@@ -98,6 +106,25 @@ class SchedulerServer:
                 int(base.x86_load + base.aux_load + base.accel_load
                     + agg.queue_depth)),
         )
+
+    # ------------------------------------------------------------ handoff
+    def register_handoff_sink(self, engine_id: str,
+                              sink: Callable[[int, bytes], None]) -> None:
+        """Bind a decode-role worker's span consumer: ``handoff`` calls
+        deliver serialized KV spans addressed to ``engine_id`` here."""
+        with self._lock:
+            self._handoff_sinks[engine_id] = sink
+
+    def handoff(self, dest: str, req_id: int, payload: bytes) -> None:
+        """Deliver one prefill's serialized KV span to ``dest``'s sink.
+        The sink runs OUTSIDE the lock — it rehydrates pool blocks and
+        must not block scheduling decisions."""
+        with self._lock:
+            sink = self._handoff_sinks.get(dest)
+            if sink is None:
+                raise KeyError(f"no handoff sink registered for {dest!r}")
+            self.handoffs += 1
+        sink(req_id, payload)
 
     def register_kernel(self, kernel: str, bank: KernelBank) -> None:
         """Bind a hardware kernel to the bank that can load it (each
@@ -153,6 +180,9 @@ class SchedulerClient:
     def publish(self, engine_id: str, signals: LoadSignals) -> None:
         self.server.publish(engine_id, signals)
 
+    def handoff(self, dest: str, req_id: int, payload: bytes) -> None:
+        self.server.handoff(dest, req_id, payload)
+
 
 # --------------------------------------------------------------- TCP mode
 
@@ -172,6 +202,11 @@ class _Handler(socketserver.StreamRequestHandler):
                 elif msg["op"] == "publish":
                     self.server.xar.publish(
                         msg["engine"], LoadSignals(**msg["signals"]))
+                    resp = {"ok": True}
+                elif msg["op"] == "handoff":
+                    self.server.xar.handoff(
+                        msg["dest"], int(msg["req_id"]),
+                        base64.b64decode(msg["payload"]))
                     resp = {"ok": True}
                 else:
                     resp = {"error": f"unknown op {msg['op']}"}
@@ -231,6 +266,12 @@ class TcpSchedulerClient:
     def publish(self, engine_id: str, signals: LoadSignals) -> None:
         self._rpc({"op": "publish", "engine": engine_id,
                    "signals": dataclasses.asdict(signals)})
+
+    def handoff(self, dest: str, req_id: int, payload: bytes) -> None:
+        resp = self._rpc({"op": "handoff", "dest": dest, "req_id": req_id,
+                          "payload": base64.b64encode(payload).decode()})
+        if "error" in resp:
+            raise RuntimeError(f"handoff failed: {resp['error']}")
 
     def close(self) -> None:
         self._sock.close()

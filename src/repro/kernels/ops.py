@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gqa_decode as _gd
+from repro.kernels import gqa_prefill as _gp
 from repro.kernels import haar_window as _hw
 from repro.kernels import knn_digits as _knn
 from repro.kernels import moe_gmm as _gmm
@@ -311,6 +312,87 @@ def paged_gqa_decode_int8(q, k_pages, k_scale, v_pages, v_scale, k_new,
     return _paged_decode_common(q, k_pages, v_pages, k_new, v_new,
                                 tables, index, kv_index, interpret,
                                 k_scale=k_scale, v_scale=v_scale)
+
+
+# ------------------------------------------------------- paged prefill
+
+def _paged_prefill_common(q, k_pages, v_pages, k_new, v_new, tables, offset,
+                          length, kv_index, interpret, k_scale=None,
+                          v_scale=None):
+    """Shared plumbing of the chunk-prefill wrappers: GQA grouping of the
+    W-token chunk queries (token-major / group-rank-minor flattening, the
+    layout the kernel's ``r // group`` causal mask expects), lane
+    padding, and the ungather back to (B, W, Hp, hd)."""
+    B, W, Hp, hd = q.shape
+    KV = k_pages.shape[2]
+    kvmap, pos, qhead_for, G = _kv_grouping(Hp, KV, kv_index)
+    interp = interpret
+    qg = q[:, :, qhead_for]                     # (B, W, KV, G, hd)
+    qg = qg.transpose(0, 2, 1, 3, 4).reshape(B, KV, W * G, hd)
+    kn, vn = k_new, v_new                       # (B, W, KV, hd) verbatim
+    hdp = k_pages.shape[-1]
+    if hdp != hd:
+        # lane-aligned pool: pad only the per-token operands (cheap)
+        qg, kn, vn = (_pad_lanes(a, -1, multiple=hdp)
+                      for a in (qg, kn, vn))
+    if not interp and qg.shape[-1] % 128:
+        # legacy unaligned pool on native TPU lanes (see decode path)
+        qg, kn, vn = (_pad_lanes(a, -1) for a in (qg, kn, vn))
+        k_pages = _pad_lanes(k_pages, -1)
+        v_pages = _pad_lanes(v_pages, -1)
+    if qg.shape[-1] != hd:
+        qg = qg * jnp.asarray(np.sqrt(qg.shape[-1] / hd), qg.dtype)
+    off = offset.astype(jnp.int32)
+    off = jnp.broadcast_to(off.reshape(-1) if off.ndim else off, (B,))
+    ln = length.astype(jnp.int32)
+    ln = jnp.broadcast_to(ln.reshape(-1) if ln.ndim else ln, (B,))
+    if k_scale is not None:
+        out = _gp.paged_gqa_prefill_int8(qg, k_pages, k_scale, v_pages,
+                                         v_scale, kn, vn,
+                                         tables.astype(jnp.int32), off, ln,
+                                         group=G, interpret=interp)
+    else:
+        out = _gp.paged_gqa_prefill(qg, k_pages, v_pages, kn, vn,
+                                    tables.astype(jnp.int32), off, ln,
+                                    group=G, interpret=interp)
+    out = out.reshape(B, KV, W, G, out.shape[-1]).transpose(0, 2, 1, 3, 4)
+    return out[:, :, kvmap, pos][..., :hd]           # (B, W, Hp, hd)
+
+
+@_with_env_interpret
+@functools.partial(jax.jit, static_argnames=("kv_index", "interpret"))
+def paged_gqa_prefill(q, k_pages, v_pages, k_new, v_new, tables, offset,
+                      length, *, kv_index: tuple | None = None,
+                      interpret: bool | None = None):
+    """Model-facing chunk-prefill attention over a block-pool KV cache.
+
+    q: (B,W,Hp,hd) chunk queries at absolute positions ``offset + j``;
+    k_pages/v_pages: (NP,BS,KV,hd) physical pool; k_new/v_new:
+    (B,W,KV,hd) the chunk's own K/V; tables: (B,NBT) int32 physical
+    block ids; offset/length: (B,) int32.  The kernel streams each
+    row's pool blocks masked to [0, offset) and folds the chunk's
+    causal self-attention on the final block step — no materialised
+    gather.
+    """
+    return _paged_prefill_common(q, k_pages, v_pages, k_new, v_new,
+                                 tables, offset, length, kv_index, interpret)
+
+
+@_with_env_interpret
+@functools.partial(jax.jit, static_argnames=("kv_index", "interpret"))
+def paged_gqa_prefill_int8(q, k_pages, k_scale, v_pages, v_scale, k_new,
+                           v_new, tables, offset, length, *,
+                           kv_index: tuple | None = None,
+                           interpret: bool | None = None):
+    """Model-facing chunk prefill over an int8 block pool with scales.
+
+    Same ABI as ``paged_gqa_prefill`` plus the parallel scale pools
+    (k_scale/v_scale (NP,BS,KV,1) f32); blocks and scale planes stream
+    through the scalar-prefetched table and dequantise in VMEM.
+    """
+    return _paged_prefill_common(q, k_pages, v_pages, k_new, v_new,
+                                 tables, offset, length, kv_index, interpret,
+                                 k_scale=k_scale, v_scale=v_scale)
 
 
 @_with_env_interpret

@@ -127,6 +127,56 @@ def paged_decode_attention_ref(q, k_pages, v_pages, k_new, v_new, tables,
     return out + (p_cur / denom).astype(q.dtype) * v_new
 
 
+def paged_prefill_attention_ref(q, k_pages, v_pages, k_new, v_new, tables,
+                                offsets, lengths, *, group=1):
+    """Gather-then-attend oracle for the paged chunk-prefill kernel.
+
+    q: (B, KV, W*G, hd) chunk queries flattened token-major /
+    group-rank-minor (row r = chunk token ``r // group``);
+    k_pages/v_pages: (NP,BS,KV,hd); k_new/v_new: (B,W,KV,hd) the chunk's
+    own K/V; tables: (B,NBT) int32; offsets/lengths: (B,) int32.  Each
+    query attends pool positions [0, offsets[b]) plus the chunk's
+    causally-preceding real columns (``< lengths[b] - offsets[b]``) —
+    the materialised-gather computation the kernel replaces.
+    """
+    B, KV, WG, hd = q.shape
+    W = k_new.shape[1]
+    BS = k_pages.shape[1]
+    NBT = tables.shape[1]
+    T = NBT * BS
+    scale = 1.0 / np.sqrt(hd)
+    kc = jnp.take(k_pages, tables, axis=0).reshape(B, T, KV, hd)
+    vc = jnp.take(v_pages, tables, axis=0).reshape(B, T, KV, hd)
+    s_ctx = jnp.einsum("bhrd,bthd->bhrt", q, kc).astype(jnp.float32) * scale
+    ctx_valid = jnp.arange(T)[None, :] < offsets[:, None]       # (B, T)
+    s_ctx = jnp.where(ctx_valid[:, None, None, :], s_ctx, -1e30)
+    kn = k_new.transpose(0, 2, 1, 3)                            # (B,KV,W,hd)
+    vn = v_new.transpose(0, 2, 1, 3)
+    s_self = jnp.einsum("bhrd,bhjd->bhrj", q, kn).astype(jnp.float32) * scale
+    qi = jnp.arange(WG)[:, None] // group
+    kj = jnp.arange(W)[None, :]
+    n_real = (lengths - offsets)[:, None, None, None]           # (B,1,1,1)
+    self_valid = (kj <= qi) & (kj < n_real)                     # (B,1,WG,W)
+    s_self = jnp.where(self_valid, s_self, -1e30)
+    p = jax.nn.softmax(jnp.concatenate([s_ctx, s_self], axis=-1), axis=-1)
+    out = jnp.einsum("bhrt,bthd->bhrd", p[..., :T].astype(q.dtype), vc)
+    return out + jnp.einsum("bhrj,bhjd->bhrd",
+                            p[..., T:].astype(q.dtype), vn)
+
+
+def paged_prefill_attention_int8_ref(q, k_pages, k_scale, v_pages, v_scale,
+                                     k_new, v_new, tables, offsets, lengths,
+                                     *, group=1):
+    """Oracle for the int8-dequantising paged chunk-prefill kernel:
+    dequantises the WHOLE pool to f32 up front, then runs the shared
+    gather-then-attend reference.  k_new/v_new stay full precision."""
+    kp = k_pages.astype(jnp.float32) * k_scale.astype(jnp.float32)
+    vp = v_pages.astype(jnp.float32) * v_scale.astype(jnp.float32)
+    return paged_prefill_attention_ref(q, kp.astype(q.dtype),
+                                       vp.astype(q.dtype), k_new, v_new,
+                                       tables, offsets, lengths, group=group)
+
+
 def paged_decode_attention_int8_ref(q, k_pages, k_scale, v_pages, v_scale,
                                     k_new, v_new, tables, lengths):
     """Oracle for the int8-dequantising paged decode kernel.

@@ -470,11 +470,23 @@ def paged_prefill_attention(q, k_pages, v_pages, table, offset, length,
     before the chunk attends over them — the chunk's own ``k_new/v_new``
     stay full precision.
 
-    There is no Pallas chunk-prefill kernel yet, so BOTH targets run
-    this XLA gather reference (identical math; decode still swaps real
-    kernels per target).
+    backend="xla" gathers the row's blocks and attends over the
+    materialised context (the HOST reference below); backend="pallas"
+    streams pool blocks through the chunk-prefill kernel
+    (``kernels.gqa_prefill.paged_gqa_prefill``) masked to [0, offset)
+    with the chunk's causal self-attention folded in-kernel — chunked
+    prefill is a genuinely different ACCEL build, like decode.
     """
-    del backend                       # no ACCEL-specific build yet
+    if backend == "pallas":
+        from repro.kernels import ops as kernel_ops
+        kvt = _static_kv_index(kv_index)
+        if k_scale is not None:
+            return kernel_ops.paged_gqa_prefill_int8(
+                q, k_pages, k_scale, v_pages, v_scale, k_new, v_new,
+                table, offset, length, kv_index=kvt)
+        return kernel_ops.paged_gqa_prefill(
+            q, k_pages, v_pages, k_new, v_new, table, offset, length,
+            kv_index=kvt)
     B, W, Hp, hd = q.shape
     NBT = table.shape[1]
     BS = k_pages.shape[1]

@@ -31,10 +31,77 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import json
 
 import numpy as np
 
 from repro.serve.api import GenerationRequest
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype by name, covering the ml_dtypes extended floats
+    (bfloat16 etc.) that ``np.dtype`` alone does not know."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+@dataclasses.dataclass
+class KVSpan:
+    """A finished prefill's KV, lifted out of one engine's block pool.
+
+    This is the disaggregation handoff unit: a prefill-role engine
+    fills scratch blocks, gathers them into per-leaf ``(L, nblk,
+    block_size, ...)`` arrays IN POOL DTYPE (int8 pools ship quantised
+    codes + scale planes untouched, so the handoff adds zero rounding),
+    and a decode-role engine scatters them into its own pool and starts
+    decoding from ``first_token``.  ``to_bytes``/``from_bytes`` give a
+    self-describing wire format (one JSON header line — scalars +
+    per-leaf name/shape/dtype — then the raw leaf bytes) for the TCP
+    control plane.
+    """
+
+    prompt: np.ndarray                 # (S,) int32
+    first_token: int
+    first_logprob: float
+    block_size: int
+    kv: dict[str, np.ndarray]          # leaf -> (L, nblk, block_size, ...)
+
+    def to_bytes(self) -> bytes:
+        prompt = np.ascontiguousarray(self.prompt, np.int32)
+        names = sorted(self.kv)
+        header = {
+            "first_token": int(self.first_token),
+            "first_logprob": float(self.first_logprob),
+            "block_size": int(self.block_size),
+            "prompt_len": int(prompt.shape[0]),
+            "leaves": [[k, list(self.kv[k].shape), self.kv[k].dtype.name]
+                       for k in names],
+        }
+        parts = [json.dumps(header).encode() + b"\n", prompt.tobytes()]
+        parts += [np.ascontiguousarray(self.kv[k]).tobytes() for k in names]
+        return b"".join(parts)
+
+    @staticmethod
+    def from_bytes(data: bytes) -> "KVSpan":
+        nl = data.index(b"\n")
+        header = json.loads(data[:nl].decode())
+        off = nl + 1
+        S = header["prompt_len"]
+        prompt = np.frombuffer(data, np.int32, count=S, offset=off).copy()
+        off += prompt.nbytes
+        kv = {}
+        for name, shape, dtype_name in header["leaves"]:
+            dt = _np_dtype(dtype_name)
+            n = int(np.prod(shape))
+            kv[name] = np.frombuffer(
+                data, dt, count=n, offset=off).reshape(shape).copy()
+            off += n * dt.itemsize
+        return KVSpan(prompt=prompt, first_token=header["first_token"],
+                      first_logprob=header["first_logprob"],
+                      block_size=header["block_size"], kv=kv)
 
 
 def chain_hashes(tokens, block_size: int) -> list[int]:
@@ -56,6 +123,23 @@ def chain_hashes(tokens, block_size: int) -> list[int]:
 
 
 @dataclasses.dataclass
+class PartialPrefill:
+    """Chunked-prefill progress of a slot that is not decode-ready yet.
+
+    ``feed`` is the FULL admission feed (prompt, plus replayed generated
+    tokens when a decode-preempted request resumes by re-prefill); the
+    slot's ``pos`` tracks how many of its positions have KV in the pool.
+    ``resume`` carries the stashed (tokens, logprobs) of that earlier
+    decode preemption, if any — it must survive a SECOND preemption that
+    lands mid-prefill, so the engine re-stashes it from here rather
+    than from the slot's (still empty) token list.
+    """
+
+    feed: np.ndarray
+    resume: tuple[list[int], list[float]] | None = None
+
+
+@dataclasses.dataclass
 class Slot:
     """One occupied row of the batched decode.
 
@@ -65,6 +149,12 @@ class Slot:
     nothing mutable needs checkpointing across preemption) and the
     metrics timestamps of its CURRENT occupancy (engine-loop clock;
     the streaming handle keeps the across-preemption aggregate).
+
+    A slot admitted under chunked prefill starts with ``prefill`` set
+    (and ``tokens`` empty): it holds its blocks and is visible to
+    preemption, but every per-step decode vector presents it as an
+    inactive row until the final chunk samples its first token and
+    clears ``prefill``.
     """
 
     index: int                 # row in the batched cache / decode batch
@@ -81,9 +171,16 @@ class Slot:
     seq: int = 0               # admission order (preemption picks youngest)
     t_admit: float = 0.0       # when this occupancy was admitted
     t_last_token: float = 0.0  # when its latest token was sampled
+    prefill: PartialPrefill | None = None   # chunked prefill in progress
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill is not None
 
     @property
     def done(self) -> bool:
+        if self.prefilling:
+            return False
         if len(self.tokens) >= self.request.max_new_tokens:
             return True
         return bool(self.tokens) and self.request.stops(self.tokens[-1])
@@ -165,10 +262,17 @@ class SlotManager:
         self._stats["released"] += 1
 
     # ------------------------------------------------- per-step vectors
+    # Slots still mid-chunked-prefill present as INACTIVE rows in every
+    # decode-step vector (token/index 0, greedy sampling, zero table):
+    # their junk decode write lands in the junk block, and their real
+    # state advances only through the chunk-prefill path.
+
     def token_vector(self) -> np.ndarray:
         """(max_slots, 1) int32: each active slot's pending token."""
         toks = np.zeros((self.max_slots, 1), np.int32)
         for idx, slot in self.active.items():
+            if slot.prefilling:
+                continue
             toks[idx, 0] = slot.last_token
         return toks
 
@@ -179,6 +283,8 @@ class SlotManager:
         ever reads (see module docstring)."""
         idx = np.zeros((self.max_slots,), np.int32)
         for i, slot in self.active.items():
+            if slot.prefilling:
+                continue
             idx[i] = slot.pos
         return idx
 
@@ -194,6 +300,8 @@ class SlotManager:
         top_p = np.ones((self.max_slots,), np.float32)
         seed = np.zeros((self.max_slots,), np.int32)
         for i, slot in self.active.items():
+            if slot.prefilling:
+                continue
             sp = slot.request.sampling
             temp[i] = sp.temperature
             top_k[i] = sp.top_k
@@ -203,7 +311,15 @@ class SlotManager:
                 "seed": seed}
 
     def active_slots(self) -> list[Slot]:
-        return [self.active[i] for i in sorted(self.active)]
+        """Decode-ready slots (rows mid-chunked-prefill are excluded —
+        the decode step must not append tokens to them)."""
+        return [self.active[i] for i in sorted(self.active)
+                if not self.active[i].prefilling]
+
+    def prefilling_slots(self) -> list[Slot]:
+        """Slots with a chunked prefill in flight, admission order."""
+        return [self.active[i] for i in sorted(self.active)
+                if self.active[i].prefilling]
 
 
 # ------------------------------------------------------------ paged layout
@@ -582,5 +698,7 @@ class PagedSlotManager(SlotManager):
         target them are inactive rows' (index 0, table row 0)."""
         table = np.zeros((self.max_slots, self.table_width), np.int32)
         for i, slot in self.active.items():
+            if slot.prefilling:
+                continue
             table[i, :len(slot.blocks)] = slot.blocks
         return table

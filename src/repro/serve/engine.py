@@ -53,7 +53,9 @@ from repro.serve.api import (
     FINISH_ABORTED, FINISH_LENGTH, FINISH_STOP, GenerationRequest,
     RequestHandle, RequestOutput, SamplingParams,
 )
-from repro.serve.batch import PagedSlotManager, Slot, SlotManager
+from repro.serve.batch import (
+    KVSpan, PagedSlotManager, PartialPrefill, Slot, SlotManager,
+)
 from repro.serve.scheduler import RequestQueue
 
 _BACKEND_DEPRECATION_WARNED = False
@@ -247,6 +249,28 @@ class ContinuousBatchingEngine:
     tolerance-level agreement (serve/README.md documents the int8
     tolerance story).
 
+    **Chunked prefill** (``prefill_tokens_per_step``, paged only): a
+    long prompt no longer stalls every in-flight decode for its whole
+    prefill.  Admission claims the slot and all its blocks but computes
+    nothing; each loop iteration then spends a token budget on
+    partially-prefilled slots via the prefill-at-offset path
+    (``prefill_ctx_sampled``), interleaved with decode steps.  The
+    budget is policy-tunable per step: a policy exposing
+    ``prefill_budget(signals, default)`` (e.g. ``LatencyAwarePolicy``)
+    sees live ``LoadSignals`` and may return None to finish
+    monolithically.  Only the FINAL chunk's in-graph sample (drawn at
+    position = prompt length, exactly the monolithic draw) is kept, so
+    greedy output is byte-identical chunked vs monolithic.  A slot
+    preempted mid-prefill frees private blocks, keeps prefix-matched
+    ones refcounted, and resumes from its completed-chunk offset.
+
+    **Disaggregation** (``prefill_to_span`` / ``submit_span``): a
+    prefill-role engine runs the chunk loop into scratch blocks and
+    lifts the KV out as a ``KVSpan`` (pool dtype, serializable); a
+    decode-role engine rehydrates it into local blocks and admits the
+    request decode-ready — ``serve/cluster.py`` routes the spans over
+    the scheduler control plane.
+
     A request whose ``stop_tokens`` fires finishes that step: its slot —
     and, under paging, its blocks — frees immediately for queued
     arrivals instead of idling out the ``max_new_tokens`` budget.
@@ -307,6 +331,7 @@ class ContinuousBatchingEngine:
                  lane_align: Optional[bool] = None,
                  policy: Optional[SchedulingPolicy] = None,
                  backend: str = "auto", eager_accel: bool = True,
+                 prefill_tokens_per_step: Optional[int] = None,
                  on_step=None):
         global _BACKEND_DEPRECATION_WARNED, _ON_STEP_DEPRECATION_WARNED
         if cfg.family not in ("dense", "vlm"):
@@ -331,6 +356,13 @@ class ContinuousBatchingEngine:
                 f"tolerance-level (not bitwise) agreement — see "
                 f"serve/README.md 'Prefix caching' for the int8 "
                 f"tolerance story")
+        if prefill_tokens_per_step is not None:
+            if not paged:
+                raise ValueError(
+                    "prefill_tokens_per_step (chunked prefill) requires "
+                    "paged=True: chunks scatter into pool blocks")
+            if prefill_tokens_per_step < 1:
+                raise ValueError("prefill_tokens_per_step must be >= 1")
         if backend not in ("host", "accel", "auto"):
             raise ValueError(f"backend must be host|accel|auto: {backend!r}")
         if backend != "auto":
@@ -359,6 +391,17 @@ class ContinuousBatchingEngine:
         self.paged = paged
         self.prefix_cache = prefix_cache
         self.policy = resolve_policy(policy) if policy is not None else None
+        # chunked prefill: on when the engine knob is set, or when the
+        # installed policy carries its own budget (LatencyAwarePolicy's
+        # prefill_tokens_per_step field) — the policy's prefill_budget
+        # hook then tunes the per-step budget from live LoadSignals
+        self.prefill_tokens_per_step = prefill_tokens_per_step
+        _pols = (self.policy,
+                 getattr(getattr(runtime, "server", None), "policy", None))
+        self._chunking = paged and (
+            prefill_tokens_per_step is not None
+            or any(getattr(p, "prefill_tokens_per_step", None) is not None
+                   for p in _pols))
         if (self.policy is not None and runtime is None
                 and not isinstance(self.policy, (PinHost, PinAccel))):
             raise ValueError(
@@ -451,11 +494,14 @@ class ContinuousBatchingEngine:
             lambda p, c, b: self.model.decode_sampled(p, c, b,
                                                       backend=direct),
             donate_argnums=(1,))
-        if self.prefix_cache:
-            # chunked prefill against the pool (prefix-cache hits skip
-            # the cached span).  The pool is NOT donated: matched blocks
-            # are shared, and the chunk's KV is returned for an explicit
-            # scatter into the slot's private blocks only.
+        self._needs_ctx = self.paged and (self.prefix_cache
+                                          or self._chunking)
+        if self.paged:
+            # prefill-at-offset against the pool — the shared chunk path
+            # of prefix-cache re-feed AND budgeted chunked prefill.  The
+            # pool is NOT donated: matched blocks are shared, and the
+            # chunk's KV is returned for an explicit scatter into the
+            # slot's private blocks only.
             self._prefill_ctx = jax.jit(
                 lambda p, c, b: self.model.prefill_ctx_sampled(
                     p, c, b, backend=direct))
@@ -477,6 +523,10 @@ class ContinuousBatchingEngine:
         self.results: dict[int, RequestOutput] = {}
         # req_id -> (tokens, logprobs) generated before preemption
         self._resume: dict[int, tuple[list[int], list[float]]] = {}
+        # req_id -> KVSpan handed off by a prefill-role engine
+        # (disaggregation); admission rehydrates instead of prefilling
+        self._spans: dict[int, "KVSpan"] = {}
+        self._step_budget: Optional[int] = None
         self._handles: dict[int, RequestHandle] = {}
         self._abort_pending: set[int] = set()
         self._abort_lock = threading.Lock()
@@ -499,10 +549,17 @@ class ContinuousBatchingEngine:
         ``prefill_tokens`` counts tokens actually COMPUTED by prefill
         (real feed positions, not bucket padding); ``prefix_hit_tokens``
         counts prompt positions served from the prefix cache instead —
-        their ratio is the cache hit rate."""
+        their ratio is the cache hit rate.  ``prefill_chunks`` counts
+        prefill-at-offset calls, ``chunk_hist`` their bucketed widths,
+        ``decode_stall_ms`` wall time spent on chunk prefills while
+        decode-ready slots waited, and ``spans_admitted`` requests
+        rehydrated from a disaggregated KV handoff."""
         self.stats = {"prefills": 0, "decode_steps": 0,
                       "decode_row_util": 0.0,
-                      "prefill_tokens": 0, "prefix_hit_tokens": 0}
+                      "prefill_tokens": 0, "prefix_hit_tokens": 0,
+                      "prefill_chunks": 0, "decode_stall_ms": 0.0,
+                      "decode_stall_max_ms": 0.0,
+                      "chunk_hist": {}, "spans_admitted": 0}
 
     def prefix_stats(self) -> dict:
         """Prefix-cache effectiveness counters (zeros when caching is
@@ -510,7 +567,12 @@ class ContinuousBatchingEngine:
         computed = self.stats["prefill_tokens"]
         hit = self.stats["prefix_hit_tokens"]
         out = {"prefill_tokens": computed, "prefix_hit_tokens": hit,
-               "prefix_hit_rate": hit / max(hit + computed, 1)}
+               "prefix_hit_rate": hit / max(hit + computed, 1),
+               "prefill_chunks": self.stats["prefill_chunks"],
+               "decode_stall_ms": self.stats["decode_stall_ms"],
+               "decode_stall_max_ms": self.stats["decode_stall_max_ms"],
+               "chunk_hist": dict(self.stats["chunk_hist"]),
+               "spans_admitted": self.stats["spans_admitted"]}
         if self.paged:
             pool = self.slots.pool
             out.update(cow_forks=self.slots._stats["cow_forks"],
@@ -634,21 +696,27 @@ class ContinuousBatchingEngine:
         rt.prepare(self._prefill_name, *ex_prefill, eager_accel=eager_accel)
         rt.prepare(self._decode_name, *ex_decode, donate_argnums=(1,),
                    eager_accel=eager_accel)
-        if self.paged and self.prefix_cache:
-            # chunked context prefill has no Pallas kernel yet: both
-            # targets run the XLA gather reference (identical math, like
-            # the int8 case above), so the ACCEL pre-configuration stays
-            # asynchronous.  Migration correctness is untouched — decode
-            # still swaps real kernels, and a migrated request's pool
-            # blocks are target-agnostic.
-            def prefill_ctx_fn(params, cache, batch):
-                return self.model.prefill_ctx_sampled(params, cache, batch)
+        if self._needs_ctx:
+            # prefill-at-offset (chunked prefill / prefix-cache re-feed):
+            # HOST is the XLA gather reference, ACCEL the paged_gqa_prefill
+            # Pallas kernel (chunk flash self-attention fused with the
+            # masked [0, offset) pool read) — the same genuine kernel
+            # asymmetry as decode, including the int8-dequantising paged
+            # variant.
+            def ctx_fn(impl):
+                def fn(params, cache, batch):
+                    return self.model.prefill_ctx_sampled(params, cache,
+                                                          batch, backend=impl)
+                return fn
 
+            host_ctx = ctx_fn("xla")
+            accel_ctx = ctx_fn("pallas") if accel_impl == "pallas" \
+                else host_ctx
             if self._prefill_ctx_name not in rt.registry:
                 rt.registry.register(MigratableFunction(
                     self._prefill_ctx_name, self._prefill_ctx_name,
-                    {TargetKind.HOST: prefill_ctx_fn,
-                     TargetKind.ACCEL: prefill_ctx_fn}))
+                    {TargetKind.HOST: host_ctx,
+                     TargetKind.ACCEL: accel_ctx}))
             ex_ctx = (self.params, self.cache,
                       {"tokens": jnp.zeros((1, self.min_bucket), jnp.int32),
                        "offset": jnp.zeros((1,), jnp.int32),
@@ -656,7 +724,8 @@ class ContinuousBatchingEngine:
                        "block_table": jnp.zeros(
                            (1, self.slots.table_width), jnp.int32),
                        **sampling_leaves(greedy, 1)})
-            rt.prepare(self._prefill_ctx_name, *ex_ctx, eager_accel=False)
+            rt.prepare(self._prefill_ctx_name, *ex_ctx,
+                       eager_accel=eager_accel)
 
     # -------------------------------------------------------- admission
     def submit(self, request, max_new_tokens: int = 16,
@@ -733,6 +802,7 @@ class ContinuousBatchingEngine:
                 req = self.queue.remove(req_id)
                 if req is not None:
                     self._resume.pop(req_id, None)
+                    self._spans.pop(req_id, None)
                     self._finalize(self._handle_for(req), FINISH_ABORTED,
                                    now)
                     done = True
@@ -746,6 +816,9 @@ class ContinuousBatchingEngine:
         backpressure replaces the dense engine's slot-count-only gate)."""
         if not self.paged:
             return True
+        if req.req_id in self._spans:
+            # handed-off KV rehydrates into exactly the prompt's blocks
+            return self.slots.can_admit(req.prompt_len, req)
         resume = self._resume.get(req.req_id)
         plen = req.prompt_len + (len(resume[0]) - 1 if resume else 0)
         if self.prefix_cache:
@@ -763,6 +836,10 @@ class ContinuousBatchingEngine:
         # tokens were already sampled (and streamed), so the recomputation
         # is bit-compatible with the original KV regardless of the
         # request's sampling spec (same math, same weights, same tokens)
+        span = self._spans.pop(req.req_id, None)
+        if span is not None:
+            self._admit_span(req, span, now)
+            return
         resume = self._resume.pop(req.req_id, None)
         if resume is None:
             feed = req.prompt
@@ -770,6 +847,23 @@ class ContinuousBatchingEngine:
             feed = np.concatenate(
                 [req.prompt, np.asarray(resume[0][:-1], np.int32)])
         S = len(feed)
+        if self.paged and self._step_budget is not None:
+            # chunked prefill: admit the slot with its blocks but NO
+            # model call — _advance_prefills spends the per-step budget
+            # on it between decode steps.  Short feeds (net of any
+            # cached prefix) stay monolithic: one call is cheaper than
+            # the chunk machinery.
+            cached = (self.slots.matchable_blocks(feed) * self.block_size
+                      if self.prefix_cache else 0)
+            if S - min(cached, S - 1) > self._step_budget:
+                try:
+                    slot = self._admit_chunked(req, feed, S, resume)
+                except RuntimeError:
+                    if resume is not None:
+                        self._resume[req.req_id] = resume
+                    raise
+                self._post_admit(slot, req, now)
+                return
         if self.paged and self.prefix_cache:
             try:
                 slot = self._admit_cached(req, feed, S, resume)
@@ -886,22 +980,8 @@ class ContinuousBatchingEngine:
             self.cache = self._copy_block(self.cache, jnp.int32(dst),
                                           jnp.int32(src))
         self.stats["prefix_hit_tokens"] += offset
-        self.stats["prefill_tokens"] += n_chunk
-        Cb = prompt_bucket(n_chunk, self.min_bucket)
-        toks = np.zeros((1, Cb), np.int32)
-        toks[0, :n_chunk] = feed[offset:]
-        table = np.zeros((1, self.slots.table_width), np.int32)
-        table[0, :len(blocks)] = blocks
-        batch = {"tokens": jnp.asarray(toks),
-                 "offset": jnp.full((1,), offset, jnp.int32),
-                 "length": jnp.full((1,), S, jnp.int32),
-                 "block_table": jnp.asarray(table),
-                 **sampling_leaves(req.sampling, 1)}
-        if self.runtime is not None:
-            tok0, lp0, pc = self.runtime.call(self._prefill_ctx_name,
-                                              self.params, self.cache, batch)
-        else:
-            tok0, lp0, pc = self._prefill_ctx(self.params, self.cache, batch)
+        tok0, lp0 = self._ctx_chunk(feed, offset, n_chunk, blocks,
+                                    req.sampling)
         self.stats["prefills"] += 1
         if resume is None:
             first, tokens, logprobs = int(np.asarray(tok0)[0]), None, None
@@ -909,22 +989,220 @@ class ContinuousBatchingEngine:
         else:
             first, (tokens, logprobs) = resume[0][-1], resume
             first_lp = 0.0
-        # scatter the chunk's KV into the blocks covering [offset, S);
-        # phys is padded with junk block 0 to a static per-bucket width
-        span = blocks[tail:]
-        nphys = (Cb + 2 * bs - 2) // bs
-        phys = np.zeros((nphys,), np.int32)
-        phys[:len(span)] = span
-        self.cache = self._scatter_chunk(self.cache, pc,
-                                         jnp.asarray(phys),
-                                         jnp.int32(offset % bs),
-                                         jnp.int32(n_chunk))
         slot = self.slots.admit(req, first, blocks=blocks, tokens=tokens,
                                 logprobs=logprobs, first_logprob=first_lp,
                                 pos=S)
         slot.block_hashes = hashes
         self.slots.register_full_blocks(slot, feed)
         return slot
+
+    def _ctx_chunk(self, feed, offset: int, n_chunk: int,
+                   blocks: list[int], sampling) -> tuple:
+        """One prefill-at-offset call — the SINGLE chunk path shared by
+        prefix-cache re-feed, budgeted chunked prefill, and the
+        disaggregated prefill-to-span loop, so every chunk width routes
+        through the same ``prompt_bucket`` policy and the compile
+        signatures coincide.
+
+        Computes KV for ``feed[offset:offset + n_chunk]`` attending the
+        pool context ``[0, offset)`` through ``blocks`` and scatters it
+        into the blocks covering those positions (physical ids padded
+        with junk block 0 to a static per-bucket width).  Returns the
+        in-graph sample ``(token, logprob)`` drawn at position
+        ``offset + n_chunk`` — meaningful only for the FINAL chunk,
+        where it equals the monolithic prefill's first draw."""
+        bs = self.slots.block_size
+        Cb = prompt_bucket(n_chunk, self.min_bucket)
+        toks = np.zeros((1, Cb), np.int32)
+        toks[0, :n_chunk] = feed[offset:offset + n_chunk]
+        table = np.zeros((1, self.slots.table_width), np.int32)
+        table[0, :len(blocks)] = blocks
+        batch = {"tokens": jnp.asarray(toks),
+                 "offset": jnp.full((1,), offset, jnp.int32),
+                 "length": jnp.full((1,), offset + n_chunk, jnp.int32),
+                 "block_table": jnp.asarray(table),
+                 **sampling_leaves(sampling, 1)}
+        if (self.runtime is not None
+                and self._prefill_ctx_name in self.runtime.registry):
+            tok0, lp0, pc = self.runtime.call(self._prefill_ctx_name,
+                                              self.params, self.cache, batch)
+        else:
+            # no migratable build registered (e.g. prefill_to_span on an
+            # engine prepared without prefix cache or chunking): the
+            # direct jit serves the chunk on the engine's own backend
+            tok0, lp0, pc = self._prefill_ctx(self.params, self.cache, batch)
+        nphys = (Cb + 2 * bs - 2) // bs
+        span = blocks[offset // bs:][:nphys]
+        phys = np.zeros((nphys,), np.int32)
+        phys[:len(span)] = span
+        self.cache = self._scatter_chunk(self.cache, pc,
+                                         jnp.asarray(phys),
+                                         jnp.int32(offset % bs),
+                                         jnp.int32(n_chunk))
+        self.stats["prefill_tokens"] += n_chunk
+        self.stats["prefill_chunks"] += 1
+        hist = self.stats["chunk_hist"]
+        hist[Cb] = hist.get(Cb, 0) + 1
+        return tok0, lp0
+
+    # ------------------------------------------------- chunked prefill
+    def _prefill_budget(self) -> Optional[int]:
+        """Prompt tokens the chunk path may compute this step: the
+        policy's ``prefill_budget`` hook (fed live signals) when it has
+        one, else the engine's static knob.  None = monolithic."""
+        policy = self.policy
+        if policy is None and self.runtime is not None:
+            policy = self.runtime.server.policy
+        hook = getattr(policy, "prefill_budget", None)
+        if hook is not None:
+            b = hook(self.signals(), self.prefill_tokens_per_step)
+        else:
+            b = self.prefill_tokens_per_step
+        return None if b is None else max(int(b), 1)
+
+    def _admit_chunked(self, req: GenerationRequest, feed: np.ndarray,
+                       S: int, resume) -> Slot:
+        """Admit a long feed WITHOUT prefilling it: claim any cached
+        prefix (shared, refcounted), allocate every remaining block up
+        front (the chunk loop then never races the pool), and mark the
+        slot partially prefilled at the block-aligned cached offset.
+        ``_advance_prefills`` computes the rest under the budget."""
+        bs = self.slots.block_size
+        matched, hashes = self.slots.match_prefix(feed)   # [] if cache off
+        offset = len(matched) * bs
+        n_total = self.slots.blocks_for(S)
+        try:
+            fresh = (self.slots.pool.alloc(n_total - len(matched))
+                     if n_total > len(matched) else [])
+        except RuntimeError:
+            self.slots.pool.free(matched)
+            raise
+        self.stats["prefix_hit_tokens"] += offset
+        slot = self.slots.admit(req, 0, blocks=matched + fresh, tokens=[],
+                                logprobs=[], pos=offset)
+        slot.block_hashes = hashes
+        slot.prefill = PartialPrefill(feed=np.asarray(feed, np.int32),
+                                      resume=resume)
+        return slot
+
+    def _advance_prefills(self, budget: Optional[int]) -> None:
+        """Spend this step's chunk budget on partially-prefilled slots,
+        oldest first (a None budget — chunking disabled for the step —
+        finishes each in one chunk).  Time spent here while decode-ready
+        slots sit waiting is the decode stall the budget knob bounds."""
+        pending = self.slots.prefilling_slots()
+        if not pending:
+            return
+        t0 = time.perf_counter()
+        stalled = bool(self.slots.active_slots())
+        remaining = float("inf") if budget is None else budget
+        for slot in pending:
+            if remaining < 1:
+                break
+            w = int(min(remaining, len(slot.prefill.feed) - slot.pos))
+            self._prefill_chunk(slot, w)
+            remaining -= w
+        if stalled:
+            ms = (time.perf_counter() - t0) * 1e3
+            self.stats["decode_stall_ms"] += ms
+            # worst single-step stall: the SLO number the budget bounds
+            self.stats["decode_stall_max_ms"] = max(
+                self.stats["decode_stall_max_ms"], ms)
+
+    def _prefill_chunk(self, slot: Slot, n_chunk: int) -> None:
+        """Advance one slot's prefill by ``n_chunk`` feed tokens.  Full
+        blocks register in the prefix index as they fill, so a
+        preemption right after this keeps them warm (cached set) and
+        resume restarts from the completed offset.  The final chunk's
+        in-graph sample is the request's first token — intermediate
+        chunks' draws are discarded (their position is not S)."""
+        feed = slot.prefill.feed
+        offset, S = slot.pos, len(feed)
+        tok0, lp0 = self._ctx_chunk(feed, offset, n_chunk, slot.blocks,
+                                    slot.request.sampling)
+        slot.pos = offset + n_chunk
+        self.slots.register_full_blocks(slot, feed[:slot.pos])
+        if slot.pos < S:
+            return
+        resume = slot.prefill.resume
+        slot.prefill = None
+        self.stats["prefills"] += 1
+        if resume is None:
+            slot.tokens = [int(np.asarray(tok0)[0])]
+            slot.logprobs = [float(np.asarray(lp0)[0])]
+        else:
+            slot.tokens = list(resume[0])
+            slot.logprobs = list(resume[1])
+        slot.last_token = slot.tokens[-1]
+        t_tok = self._now()
+        slot.t_last_token = t_tok
+        self._sync_handle(slot, t_tok)
+        if slot.done:
+            self._finish(slot, t_tok)
+
+    # --------------------------------------------------- disaggregation
+    def prefill_to_span(self, request: GenerationRequest,
+                        budget: Optional[int] = None) -> KVSpan:
+        """Prefill-role entry: run ``request``'s prefill into scratch
+        pool blocks (chunked under ``budget``, or this engine's own
+        per-step budget), lift the KV out as a ``KVSpan``, and free the
+        blocks.  The span carries the prompt KV in POOL dtype plus the
+        first sampled token/logprob, so a decode-role engine admits the
+        request via ``submit_span`` without recomputing anything."""
+        if not self.paged:
+            raise ValueError("prefill_to_span requires paged=True")
+        feed = np.asarray(request.prompt, np.int32)
+        S = len(feed)
+        blocks = self.slots.pool.alloc(self.slots.blocks_for(S))
+        try:
+            offset, tok0, lp0 = 0, None, None
+            step = budget if budget is not None else self._prefill_budget()
+            while offset < S:
+                w = S - offset if step is None else min(step, S - offset)
+                tok0, lp0 = self._ctx_chunk(feed, offset, w, blocks,
+                                            request.sampling)
+                offset += w
+            self.stats["prefills"] += 1
+            bl = np.asarray(blocks)
+            kv = {k: np.asarray(self.cache[k][:, bl]) for k in self.cache}
+        finally:
+            self.slots.pool.free(blocks)
+        return KVSpan(prompt=feed, first_token=int(np.asarray(tok0)[0]),
+                      first_logprob=float(np.asarray(lp0)[0]),
+                      block_size=self.block_size, kv=kv)
+
+    def submit_span(self, request: GenerationRequest, span: KVSpan,
+                    on_token=None) -> RequestHandle:
+        """Decode-role entry: queue a request whose prefill already ran
+        on another engine; admission rehydrates the span's blocks into
+        the local pool instead of prefilling."""
+        if not self.paged:
+            raise ValueError("submit_span requires paged=True")
+        if span.block_size != self.block_size:
+            raise ValueError(
+                f"span block_size {span.block_size} != engine "
+                f"block_size {self.block_size}")
+        self._spans[request.req_id] = span
+        self.queue.submit(self.slots.validate(request))
+        return self._handle_for(request, on_token=on_token)
+
+    def _admit_span(self, req: GenerationRequest, span: KVSpan,
+                    now: float) -> None:
+        """Rehydrate a handed-off prefill: scatter the span's block KV
+        (already pool-dtype) into freshly allocated local blocks and
+        admit the slot decode-ready at pos = prompt length."""
+        S = len(span.prompt)
+        blocks = self.slots.pool.alloc(self.slots.blocks_for(S))
+        part = {k: jnp.asarray(v.reshape(v.shape[0], 1, -1, *v.shape[3:]))
+                for k, v in span.kv.items()}
+        self.cache = self._scatter(self.cache, part,
+                                   jnp.asarray(blocks, jnp.int32))
+        slot = self.slots.admit(req, span.first_token, blocks=blocks,
+                                first_logprob=span.first_logprob, pos=S)
+        if self.prefix_cache:
+            self.slots.register_full_blocks(slot, span.prompt)
+        self.stats["spans_admitted"] += 1
+        self._post_admit(slot, req, now)
 
     def _sync_handle(self, slot: Slot, now: float) -> None:
         """Stream any not-yet-emitted tokens to the request's handle.
@@ -959,9 +1237,23 @@ class ContinuousBatchingEngine:
         front.  The resume path re-prefills prompt+generated, so output
         is unchanged (sampled tokens replay from the stash; sampling
         keys depend only on (seed, position), so post-resume draws are
-        unchanged too)."""
-        self._resume[slot.request.req_id] = (list(slot.tokens),
-                                             list(slot.logprobs))
+        unchanged too).
+
+        A slot caught MID-CHUNKED-PREFILL has no generated tokens to
+        stash — stashing its empty token list would corrupt resume.
+        Instead, re-stash only the original decode-preemption replay it
+        was carrying (if any).  Its private blocks free; its REGISTERED
+        full blocks park in the pool's cached set (prefix-matched
+        shared ones just drop our reference), so resume re-matches them
+        and restarts from the completed-chunk offset, not token 0."""
+        if slot.prefilling:
+            if slot.prefill.resume is not None:
+                self._resume[slot.request.req_id] = slot.prefill.resume
+            else:
+                self._resume.pop(slot.request.req_id, None)
+        else:
+            self._resume[slot.request.req_id] = (list(slot.tokens),
+                                                 list(slot.logprobs))
         self.slots.preempt(slot)
         self.queue.requeue(slot.request)
 
@@ -975,6 +1267,8 @@ class ContinuousBatchingEngine:
         for slot in sorted(self.slots.active.values(), key=lambda s: s.seq):
             if self.slots.active.get(slot.index) is not slot:
                 continue                   # preempted earlier this pass
+            if slot.prefilling:
+                continue   # holds every block up front; still a victim
             if self.slots.needs_block(slot):
                 while not self.slots.pool.free_blocks():
                     victims = [s for s in self.slots.active.values()
@@ -1081,6 +1375,8 @@ class ContinuousBatchingEngine:
                 # iteration's steps sees the arrived-but-unadmitted
                 # pressure, and a central scheduler sees it cross-engine
                 self._publish_signals()
+                self._step_budget = (self._prefill_budget()
+                                     if self._chunking else None)
                 while self.slots.has_free():
                     req = self.queue.pop_arrived(now)
                     if req is None:
@@ -1091,6 +1387,8 @@ class ContinuousBatchingEngine:
                         self.queue.requeue(req)
                         break
                     self._admit(req, now)
+                if self._chunking:
+                    self._advance_prefills(self._step_budget)
                 if self.slots.active:
                     self._decode_step()
                     if self.on_step is not None:

@@ -1,0 +1,475 @@
+"""Chunked prefill + prefill/decode disaggregation.
+
+Four layers under test, mirroring the implementation stack:
+
+* the Pallas prefill-at-offset kernel (``ops.paged_gqa_prefill`` and
+  its int8 variant) against the XLA gather-then-attend path across GQA
+  ratios, offsets (including 0 and block-unaligned) and pool dtypes;
+* the engine's budgeted chunk loop — greedy tokens must be
+  byte-identical chunked-on vs chunked-off on HOST, on ACCEL, under a
+  forced HOST -> ACCEL -> HOST migration, and across a preemption that
+  lands MID-prefill (the resume must restart from the completed-chunk
+  offset, not token 0);
+* the shared ``prompt_bucket`` compile signature: with the chunk budget
+  at or below ``min_bucket`` every prefill_ctx call matches the default
+  example shape, so a mixed prompt stream records ZERO bucket misses;
+* the disaggregated cluster: prefill-role workers chunk prompts into
+  ``KVSpan`` payloads handed to decode-role workers over the control
+  plane, and the output stream stays byte-identical to a mixed fleet.
+
+Byte-identity tests pin ``kv_cache_dtype`` to the compute dtype — the
+same lossless-pool argument as the prefix-cache suite.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.function import FunctionRegistry
+from repro.core.runtime import XarTrekRuntime
+from repro.kernels import ops
+from repro.models.attention import paged_prefill_attention
+from repro.serve import (ContinuousBatchingEngine, GenerationRequest,
+                         ServeEngine)
+from repro.serve.batch import KVSpan
+from repro.serve.cluster import ClusterFrontEnd
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _serve(engine, reqs=()):
+    return {rid: out.tokens for rid, out in engine.run(reqs).items()}
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(reduced(ARCHS["smollm-135m"]),
+                               dtype="float32", kv_cache_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def sync_engine(cfg):
+    return ServeEngine(cfg, seed=0)
+
+
+def _prompt_set(cfg, seed=0):
+    """Mixed stream: short (monolithic), block-unaligned medium, long
+    multi-chunk — plus a shared-prefix pair to keep the cache busy."""
+    rng = np.random.RandomState(seed)
+    prefix = rng.randint(1, cfg.vocab_size, size=9)
+    return [
+        rng.randint(1, cfg.vocab_size, size=5),
+        rng.randint(1, cfg.vocab_size, size=21),
+        np.concatenate([prefix, rng.randint(1, cfg.vocab_size, size=4)]),
+        np.concatenate([prefix, rng.randint(1, cfg.vocab_size, size=24)]),
+    ]
+
+
+def _reqs(prompts, n=6):
+    return [GenerationRequest(np.asarray(p, np.int32), max_new_tokens=n)
+            for p in prompts]
+
+
+def _engine(cfg, params, *, prefix=True, **kw):
+    base = dict(max_slots=5, max_seq=64, params=params,
+                paged=True, block_size=8, num_blocks=24)
+    base.update(kw)
+    return ContinuousBatchingEngine(cfg, prefix_cache=prefix, **base)
+
+
+# ------------------------------------------------- kernel vs XLA oracle
+
+def _prefill_problem(seed, B, KV, G, hd, NP, BS, NBT, W):
+    """Random pool + distinct-block tables + a W-token chunk's q/k/v."""
+    rng = np.random.RandomState(seed)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    kp = _rand(ks[0], (NP, BS, KV, hd))
+    vp = _rand(ks[1], (NP, BS, KV, hd))
+    tables = jnp.asarray(
+        np.stack([rng.permutation(NP)[:NBT] for _ in range(B)]), jnp.int32)
+    q = _rand(ks[2], (B, W, KV * G, hd))
+    kn = _rand(ks[3], (B, W, KV, hd))
+    vn = _rand(ks[4], (B, W, KV, hd))
+    return q, kp, vp, kn, vn, tables
+
+
+def _kv_index(KV, G):
+    return np.repeat(np.arange(KV), G)
+
+
+@pytest.mark.parametrize("KV,G", [(1, 1), (2, 2), (2, 4)])
+@pytest.mark.parametrize("offset", [0, 8, 11])
+def test_prefill_kernel_matches_xla_gather(KV, G, offset):
+    """Streamed pool read masked to [0, offset) + fused chunk causal
+    self-attention == gather-then-attend, across GQA ratios and both
+    block-aligned and mid-block offsets (BS=8 -> 11 is unaligned)."""
+    B, hd, NP, BS, NBT, W = 2, 16, 12, 8, 4, 8
+    q, kp, vp, kn, vn, tables = _prefill_problem(3, B, KV, G, hd,
+                                                 NP, BS, NBT, W)
+    n_real = 5                       # chunk padding columns past length
+    off = jnp.full((B,), offset, jnp.int32)
+    length = off + n_real
+    kvi = _kv_index(KV, G)
+    want = paged_prefill_attention(q, kp, vp, tables, off, length, kn, vn,
+                                   kv_index=kvi, backend="xla")
+    got = paged_prefill_attention(q, kp, vp, tables, off, length, kn, vn,
+                                  kv_index=kvi, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got)[:, :n_real],
+                               np.asarray(want)[:, :n_real],
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_prefill_kernel_pool_junk_isolation():
+    """Pool columns at or past ``offset`` are junk (uninitialised or
+    other requests' blocks): poison them with huge values and the
+    kernel's output must not move."""
+    B, KV, G, hd, NP, BS, NBT, W = 1, 2, 2, 16, 10, 8, 3, 8
+    q, kp, vp, kn, vn, tables = _prefill_problem(7, B, KV, G, hd,
+                                                 NP, BS, NBT, W)
+    off = jnp.asarray([9], jnp.int32)
+    length = jnp.asarray([9 + W], jnp.int32)
+    kvi = _kv_index(KV, G)
+    clean = paged_prefill_attention(q, kp, vp, tables, off, length, kn, vn,
+                                    kv_index=kvi, backend="pallas")
+    kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+    # poison every pool position past the context in logical order
+    order = np.asarray(tables)[0]
+    flat_k = kp2[order].reshape(NBT * BS, KV, hd)
+    flat_v = vp2[order].reshape(NBT * BS, KV, hd)
+    flat_k[9:] = 1e4
+    flat_v[9:] = 1e4
+    kp2[order] = flat_k.reshape(NBT, BS, KV, hd)
+    vp2[order] = flat_v.reshape(NBT, BS, KV, hd)
+    dirty = paged_prefill_attention(q, jnp.asarray(kp2), jnp.asarray(vp2),
+                                    tables, off, length, kn, vn,
+                                    kv_index=kvi, backend="pallas")
+    np.testing.assert_allclose(np.asarray(dirty), np.asarray(clean),
+                               atol=2e-5, rtol=2e-5)
+
+
+def _quantise(pages):
+    """Symmetric per-(token, kv-head) int8 quantisation of a pool."""
+    p = np.asarray(pages)
+    scale = np.abs(p).max(axis=-1, keepdims=True) / 127.0
+    scale = np.maximum(scale, 1e-8).astype(np.float32)
+    q = np.clip(np.round(p / scale), -127, 127).astype(np.int8)
+    return jnp.asarray(q), jnp.asarray(scale)
+
+
+@pytest.mark.parametrize("offset", [0, 13])
+def test_prefill_kernel_int8_matches_xla(offset):
+    """Int8 pool + scale planes: in-kernel dequantisation must equal the
+    XLA dequantise-gather-attend path on the SAME quantised inputs."""
+    B, KV, G, hd, NP, BS, NBT, W = 2, 2, 2, 16, 12, 8, 4, 8
+    q, kp, vp, kn, vn, tables = _prefill_problem(11, B, KV, G, hd,
+                                                 NP, BS, NBT, W)
+    kq, ksc = _quantise(kp)
+    vq, vsc = _quantise(vp)
+    off = jnp.full((B,), offset, jnp.int32)
+    length = off + W
+    kvi = _kv_index(KV, G)
+    want = paged_prefill_attention(q, kq, vq, tables, off, length, kn, vn,
+                                   kv_index=kvi, backend="xla",
+                                   k_scale=ksc, v_scale=vsc)
+    got = paged_prefill_attention(q, kq, vq, tables, off, length, kn, vn,
+                                  kv_index=kvi, backend="pallas",
+                                  k_scale=ksc, v_scale=vsc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_prefill_wrapper_accepts_scalar_offset():
+    """ops wrappers broadcast scalar offset/length to (B,)."""
+    B, KV, G, hd, NP, BS, NBT, W = 2, 2, 1, 16, 8, 8, 2, 8
+    q, kp, vp, kn, vn, tables = _prefill_problem(5, B, KV, G, hd,
+                                                 NP, BS, NBT, W)
+    kvi = tuple(_kv_index(KV, G).tolist())
+    a = ops.paged_gqa_prefill(q, kp, vp, kn, vn, tables,
+                              jnp.int32(8), jnp.int32(16), kv_index=kvi)
+    b = ops.paged_gqa_prefill(q, kp, vp, kn, vn, tables,
+                              jnp.full((B,), 8, jnp.int32),
+                              jnp.full((B,), 16, jnp.int32), kv_index=kvi)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------------------------------- KVSpan wire form
+
+def test_kv_span_round_trip():
+    """to_bytes/from_bytes preserve every leaf bit-for-bit, including a
+    bfloat16 pool (dtype name resolved through ml_dtypes)."""
+    import ml_dtypes
+    rng = np.random.RandomState(0)
+    kv = {
+        "k": rng.randn(2, 3, 8, 2, 4).astype(np.float32),
+        "v": rng.randn(2, 3, 8, 2, 4).astype(ml_dtypes.bfloat16),
+    }
+    span = KVSpan(prompt=np.arange(17, dtype=np.int32), first_token=42,
+                  first_logprob=-1.25, block_size=8, kv=kv)
+    back = KVSpan.from_bytes(span.to_bytes())
+    assert back.first_token == 42
+    assert back.first_logprob == pytest.approx(-1.25)
+    assert back.block_size == 8
+    np.testing.assert_array_equal(back.prompt, span.prompt)
+    for name, leaf in kv.items():
+        assert back.kv[name].dtype == leaf.dtype
+        np.testing.assert_array_equal(
+            back.kv[name].view(np.uint8), leaf.view(np.uint8))
+
+
+# ------------------------------------------- engine-level byte identity
+
+def test_host_chunked_on_off_byte_identical(cfg, sync_engine):
+    prompts = _prompt_set(cfg)
+    off = _engine(cfg, sync_engine.params, prefix=False)
+    r_off = _reqs(prompts)
+    want = _serve(off, r_off)
+    on = _engine(cfg, sync_engine.params, prefix=False,
+                 prefill_tokens_per_step=8)
+    r_on = _reqs(prompts)
+    got = _serve(on, r_on)
+    for a, b in zip(r_off, r_on):
+        np.testing.assert_array_equal(want[a.req_id], got[b.req_id])
+    assert on.stats["prefill_chunks"] > 0
+    assert sum(on.stats["chunk_hist"].values()) == on.stats["prefill_chunks"]
+
+
+def test_chunked_with_prefix_cache_byte_identical(cfg, sync_engine):
+    """Chunking composes with prefix caching: a second run on the same
+    engine revives the first run's registered chunk blocks, so the
+    shared-prefix prompt starts its chunk loop at the matched-block
+    offset instead of token 0."""
+    prompts = _prompt_set(cfg)
+    off = _engine(cfg, sync_engine.params, prefix=False)
+    r_off = _reqs(prompts)
+    want = _serve(off, r_off)
+    on = _engine(cfg, sync_engine.params, prefill_tokens_per_step=8)
+    r_first = _reqs(prompts[:3])
+    got = _serve(on, r_first)
+    r_second = _reqs(prompts[3:])
+    got.update(_serve(on, r_second))
+    for a, b in zip(r_off, r_first + r_second):
+        np.testing.assert_array_equal(want[a.req_id], got[b.req_id])
+    assert on.prefix_stats()["prefix_hit_tokens"] > 0
+    assert on.stats["prefill_chunks"] > 0
+
+
+def test_accel_chunked_on_off_byte_identical(cfg, sync_engine):
+    prompts = _prompt_set(cfg)
+    off = _engine(cfg, sync_engine.params, prefix=False, backend="accel")
+    r_off = _reqs(prompts)
+    want = _serve(off, r_off)
+    on = _engine(cfg, sync_engine.params, prefix=False, backend="accel",
+                 prefill_tokens_per_step=8)
+    r_on = _reqs(prompts)
+    got = _serve(on, r_on)
+    for a, b in zip(r_off, r_on):
+        np.testing.assert_array_equal(want[a.req_id], got[b.req_id])
+    assert on.stats["prefill_chunks"] > 0
+
+
+def test_migration_chunked_on_off_byte_identical(cfg, sync_engine):
+    """Forced HOST -> ACCEL -> HOST mid-stream with chunking on: chunk
+    prefills land on whichever target the policy picks per call and the
+    stream stays bit-for-bit."""
+    prompts = _prompt_set(cfg)
+    off = _engine(cfg, sync_engine.params, prefix=False)
+    r_off = _reqs(prompts)
+    want = _serve(off, r_off)
+
+    rt = XarTrekRuntime(registry=FunctionRegistry(), policy="always_host")
+
+    def flip(engine):
+        s = engine.stats["decode_steps"]
+        if s == 1:
+            rt.server.policy = "always_accel"
+        elif s == 3:
+            rt.server.policy = "always_host"
+
+    on = _engine(cfg, sync_engine.params, prefix=False, runtime=rt,
+                 on_step=flip, prefill_tokens_per_step=8)
+    r_on = _reqs(prompts)
+    got = _serve(on, r_on)
+    for a, b in zip(r_off, r_on):
+        np.testing.assert_array_equal(want[a.req_id], got[b.req_id])
+    decode = rt.summary()["per_function"]["cb_decode"]
+    assert decode["calls"].get("host", 0) >= 1
+    assert decode["calls"].get("accel", 0) >= 1
+    assert on.stats["prefill_chunks"] > 0
+
+
+def test_policy_budget_hook_drives_chunking(cfg, sync_engine):
+    """No static knob: the engine pulls the per-step budget from the
+    policy's ``prefill_budget`` hook (LatencyAwarePolicy's knob).  The
+    hook returns None while no decode slot is active — nothing to
+    stall — so the first admissions prefill monolithically and only
+    later prompts, arriving against live decoders, get chunked
+    (max_slots=2 plus a long-decoding first request force that)."""
+    from repro.core.policy import LatencyAwarePolicy
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(1, cfg.vocab_size, size=n) for n in (5, 21, 33)]
+    lens = [20, 4, 4]
+
+    def reqs():
+        return [GenerationRequest(np.asarray(p, np.int32),
+                                  max_new_tokens=n)
+                for p, n in zip(prompts, lens)]
+
+    off = _engine(cfg, sync_engine.params, prefix=False)
+    r_off = reqs()
+    want = _serve(off, r_off)
+    pol = LatencyAwarePolicy(prefill_tokens_per_step=8)
+    rt = XarTrekRuntime(registry=FunctionRegistry(), policy=pol)
+    on = _engine(cfg, sync_engine.params, prefix=False, runtime=rt,
+                 max_slots=2)
+    r_on = reqs()
+    got = _serve(on, r_on)
+    for a, b in zip(r_off, r_on):
+        np.testing.assert_array_equal(want[a.req_id], got[b.req_id])
+    assert on.stats["prefill_chunks"] > 0
+
+
+# ----------------------------------------- preempt mid-prefill (bugfix)
+
+def test_preempt_mid_prefill_resumes_from_offset(cfg, sync_engine):
+    """A short decoder outgrows a tight pool while a long prompt is
+    still chunk-prefilling: the prefilling slot is preempted, frees its
+    private blocks but keeps the registered full ones in the cached
+    set, and the resume restarts from the completed-chunk offset — not
+    token 0 — with tokens equal to an unconstrained engine's."""
+    rng = np.random.RandomState(3)
+    p1 = rng.randint(1, cfg.vocab_size, size=6)
+    p2 = rng.randint(1, cfg.vocab_size, size=20)
+    big = _engine(cfg, sync_engine.params, prefix=False,
+                  max_slots=2, max_seq=32)
+    d1, d2 = _reqs([p1, p2], n=12)
+    want = _serve(big, [d1, d2])
+    small = _engine(cfg, sync_engine.params, max_slots=2, max_seq=32,
+                    block_size=4, num_blocks=8, prefill_tokens_per_step=2)
+    s1, s2 = _reqs([p1, p2], n=12)
+    got = _serve(small, [s1, s2])
+    assert small.slots.stats["preempted"] >= 1
+    # the resume matched the chunks registered before preemption
+    assert small.prefix_stats()["prefix_hit_tokens"] > 0
+    np.testing.assert_array_equal(want[d1.req_id], got[s1.req_id])
+    np.testing.assert_array_equal(want[d2.req_id], got[s2.req_id])
+    assert small.slots.pool.blocks_in_use() == 0
+
+
+# ----------------------------------------------- shared prompt buckets
+
+def test_mixed_stream_zero_bucket_misses(cfg, sync_engine):
+    """Satellite (a): chunked prefill, prefix-cache re-feed and
+    resume-by-re-prefill all route through ``_ctx_chunk`` with widths
+    bucketed by ``prompt_bucket`` — with the budget at ``min_bucket``
+    every prefill_ctx call matches the registered example signature, so
+    a mixed stream records zero shape-bucket misses."""
+    rt = XarTrekRuntime(registry=FunctionRegistry(), policy="always_host")
+    eng = _engine(cfg, sync_engine.params, runtime=rt,
+                  prefill_tokens_per_step=8)
+    _serve(eng, _reqs(_prompt_set(cfg)))
+    assert eng.stats["prefill_chunks"] > 0
+    buckets = rt.summary()["shape_buckets"].get("cb_prefill_ctx",
+                                                {"misses": 0})
+    assert buckets["misses"] == 0
+
+
+# ----------------------------------------------- disaggregated cluster
+
+def test_disagg_cluster_byte_identical_and_observable(cfg, sync_engine):
+    """1 prefill + 1 decode worker vs a mixed fleet: same greedy bytes,
+    and the summary exposes roles, handoff count and per-worker
+    chunked-prefill stats (satellite b)."""
+    rng = np.random.RandomState(4)
+    prompts = [rng.randint(1, cfg.vocab_size, size=n) for n in (19, 7, 30)]
+
+    def run(**kw):
+        fe = ClusterFrontEnd(cfg, n_engines=2, params=sync_engine.params,
+                             max_slots=4, max_seq=64, paged=True,
+                             block_size=8, num_blocks=24, **kw)
+        with fe:
+            fe.warmup()
+            hs = [fe.submit(GenerationRequest(np.asarray(p, np.int32),
+                                              max_new_tokens=5))
+                  for p in prompts]
+            outs = fe.drain(timeout=180)
+            summ = fe.summary()
+        return [outs[h.req_id].tokens for h in hs], summ
+
+    want, _ = run()
+    got, summ = run(roles=["prefill", "decode"], prefill_tokens_per_step=8)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    assert summ["roles"] == {"w0": "prefill", "w1": "decode"}
+    # the 7-token prompt sits under the span threshold and prefills in
+    # place on the decode owner; the two long ones ride the span tier
+    assert summ["handoffs"] >= 2
+    assert summ["chunked_prefill"]["w0"]["prefill_chunks"] > 0
+    assert summ["chunked_prefill"]["w1"]["spans_admitted"] == 2
+
+
+def test_disagg_cluster_tcp_transport(cfg, sync_engine):
+    """Handoffs ride the line-JSON TCP control plane (base64 payloads),
+    not just the in-process fast path."""
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(1, cfg.vocab_size, size=n) for n in (19, 30)]
+    fe = ClusterFrontEnd(cfg, n_engines=2, params=sync_engine.params,
+                         transport="tcp", max_slots=4, max_seq=64,
+                         paged=True, block_size=8, num_blocks=24,
+                         roles=["prefill", "decode"],
+                         prefill_tokens_per_step=8)
+    with fe:
+        fe.warmup()
+        hs = [fe.submit(GenerationRequest(np.asarray(p, np.int32),
+                                          max_new_tokens=5))
+              for p in prompts]
+        outs = fe.drain(timeout=180)
+        summ = fe.summary()
+    assert summ["handoffs"] >= len(prompts)
+    for h in hs:
+        assert outs[h.req_id].finish_reason == "length"
+        assert len(outs[h.req_id].tokens) == 5
+
+
+def test_prefill_role_requires_paged_and_decode_capable(cfg, sync_engine):
+    with pytest.raises(ValueError):
+        ClusterFrontEnd(cfg, n_engines=2, params=sync_engine.params,
+                        roles=["prefill", "prefill"], paged=True,
+                        max_slots=2, max_seq=32, block_size=8,
+                        num_blocks=16)
+    with pytest.raises(ValueError):
+        ClusterFrontEnd(cfg, n_engines=2, params=sync_engine.params,
+                        roles=["prefill", "decode"], max_slots=2,
+                        max_seq=32)
+
+
+def test_engine_span_round_trip(cfg, sync_engine):
+    """prefill_to_span on one engine, submit_span on another: the decode
+    engine never sees the prompt's forward pass yet produces the same
+    stream as a local end-to-end run."""
+    rng = np.random.RandomState(6)
+    prompt = rng.randint(1, cfg.vocab_size, size=19)
+    [req] = _reqs([prompt], n=6)
+    local = _engine(cfg, sync_engine.params, prefix=False)
+    want = _serve(local, [req])[req.req_id]
+
+    pre = _engine(cfg, sync_engine.params, prefix=False)
+    span = KVSpan.from_bytes(
+        pre.prefill_to_span(GenerationRequest(
+            np.asarray(prompt, np.int32), max_new_tokens=6,
+            req_id=req.req_id), budget=8).to_bytes())
+    assert pre.slots.pool.blocks_in_use() == 0     # scratch blocks freed
+
+    dec = _engine(cfg, sync_engine.params, prefix=False)
+    dec.submit_span(GenerationRequest(np.asarray(prompt, np.int32),
+                                      max_new_tokens=6,
+                                      req_id=req.req_id), span)
+    out = dec.run()[req.req_id]
+    np.testing.assert_array_equal(want, out.tokens)
+    assert dec.stats["spans_admitted"] == 1
+    assert dec.stats["prefills"] == 0          # never ran the prompt
