@@ -87,6 +87,11 @@ class LoadSignals:
     accel_decode_ms: Optional[float] = None
     ttft_p50_s: Optional[float] = None
     tpot_p50_s: Optional[float] = None
+    # EWMA of per-step decode stall caused by interleaved prefill chunks
+    # (ms decode had to wait while a chunk ran); decays toward 0 on
+    # chunk-free steps.  The stall-feedback prefill_budget controller's
+    # input.  None until an engine with chunking enabled reports.
+    decode_stall_ms: Optional[float] = None
     engines: int = 1
 
     @staticmethod
@@ -118,6 +123,7 @@ class LoadSignals:
             accel_decode_ms=mean([s.accel_decode_ms for s in signals]),
             ttft_p50_s=mean([s.ttft_p50_s for s in signals]),
             tpot_p50_s=mean([s.tpot_p50_s for s in signals]),
+            decode_stall_ms=mean([s.decode_stall_ms for s in signals]),
             engines=sum(s.engines for s in signals),
         )
 
@@ -150,6 +156,18 @@ class SchedulingPolicy(Protocol):
     disables chunking for the step — finish monolithically).  Engines
     fall back to their static ``prefill_tokens_per_step`` when the
     policy has no hook.
+
+    Speculative-decoding engines likewise consult an optional hook
+
+        ``draft_len(signals, default) -> int``
+
+    once per scheduler step: return the number of tokens the draft
+    model may propose this round (``0`` disables speculation for the
+    step — the engine falls back to plain decode), clamped by the
+    engine to its compiled draft width.  Engines use ``default``
+    (their configured ``spec_draft_len``) when the policy has no hook.
+    Mirrors ``prefill_budget``: both let load shrink work the engine
+    would otherwise do optimistically.
     """
 
     name: str
@@ -251,12 +269,25 @@ class LatencyAwarePolicy:
     the chunked-prefill budget hook: the budget applies only while
     decodes are actually in flight (``active_slots > 0``) — an idle
     engine prefills monolithically, since there is nothing to stall.
+    The budget is stall-feedback controlled: when the engines report a
+    ``decode_stall_ms`` EWMA above ``stall_target_ms``, the budget
+    contracts proportionally (``target / stall``, floored at one
+    token) so decode stops paying for oversized chunks; at or below
+    target the full configured budget applies.  Set
+    ``stall_target_ms=None`` for the old static knob.
+
+    ``draft_len`` implements the speculative-decoding hook the same
+    way: draft length is an optimism dial, so queue pressure halves it
+    and hard pressure (``pressured``) disables speculation outright —
+    under load, guaranteed-progress plain decode beats speculative
+    work that may be thrown away.
     """
 
     queue_depth_hi: int = 4
     free_kv_lo: float = 0.125
     ttft_slo_s: Optional[float] = None
     prefill_tokens_per_step: Optional[int] = None
+    stall_target_ms: Optional[float] = 50.0
     name: str = "latency_aware"
 
     def pressured(self, s: LoadSignals) -> bool:
@@ -285,7 +316,21 @@ class LatencyAwarePolicy:
         budget = self.prefill_tokens_per_step or default
         if budget is None or signals.active_slots == 0:
             return None        # nothing to stall: prefill monolithically
+        stall = signals.decode_stall_ms
+        if (self.stall_target_ms is not None and stall is not None
+                and stall > self.stall_target_ms):
+            # stall-feedback contraction: chunk cost is ~linear in chunk
+            # tokens, so scaling by target/stall steers the EWMA back to
+            # the target; the floor keeps prefill from starving outright
+            return max(int(budget * self.stall_target_ms / stall), 1)
         return budget
+
+    def draft_len(self, signals: LoadSignals, default: int = 4) -> int:
+        if self.pressured(signals):
+            return 0           # hard pressure: no speculative work
+        if signals.queue_depth >= max(self.queue_depth_hi // 2, 1):
+            return max(default // 2, 1)
+        return default
 
 
 # legacy policy strings -> protocol instances (the scheduler server and

@@ -23,6 +23,13 @@ bucketed dense prefill rely on.
 per-token f32 scale planes through the same block table and
 dequantises in VMEM.  Oracles: ``ref.paged_prefill_attention_ref`` /
 ``ref.paged_prefill_attention_int8_ref``.
+
+This kernel IS the speculative-decode verify kernel: verifying k
+drafted tokens against the target model is chunk prefill at offset
+with W = k (the "chunk" is the drafted span, the pool holds the
+committed prefix).  ``ops.paged_gqa_verify`` / ``paged_gqa_verify_int8``
+re-export the same body under a distinct name so the runtime registers
+verify as its own HOST/ACCEL binary; the oracles above cover both.
 """
 from __future__ import annotations
 

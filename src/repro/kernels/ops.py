@@ -396,6 +396,45 @@ def paged_gqa_prefill_int8(q, k_pages, k_scale, v_pages, v_scale, k_new,
 
 
 @_with_env_interpret
+@functools.partial(jax.jit, static_argnames=("kv_index", "interpret"))
+def paged_gqa_verify(q, k_pages, v_pages, k_new, v_new, tables, offset,
+                     length, *, kv_index: tuple | None = None,
+                     interpret: bool | None = None):
+    """Model-facing speculative-decode VERIFY attention.
+
+    The verify pass of speculative decoding scores a slot's k drafted
+    tokens in one batched step; its attention math is EXACTLY chunk
+    prefill at offset (the chunk is the drafted span, the pool holds the
+    committed prefix), so this delegates to the same kernel body as
+    ``paged_gqa_prefill``.  It exists as a separately-named wrapper so
+    the serve engine can register verify as a DISTINCT HOST/ACCEL
+    binary in the Xar-Trek runtime — migration decisions and
+    ``summary()`` call accounting see draft and verify independently.
+    ABI identical to ``paged_gqa_prefill``.
+    """
+    return _paged_prefill_common(q, k_pages, v_pages, k_new, v_new,
+                                 tables, offset, length, kv_index, interpret)
+
+
+@_with_env_interpret
+@functools.partial(jax.jit, static_argnames=("kv_index", "interpret"))
+def paged_gqa_verify_int8(q, k_pages, k_scale, v_pages, v_scale, k_new,
+                          v_new, tables, offset, length, *,
+                          kv_index: tuple | None = None,
+                          interpret: bool | None = None):
+    """Speculative-decode verify over an int8 block pool with scales.
+
+    Same ABI as ``paged_gqa_prefill_int8`` (see ``paged_gqa_verify`` for
+    why verify gets its own wrapper): blocks and scale planes stream
+    through the scalar-prefetched table and dequantise in VMEM, so
+    ACCEL verify over a quantised pool is a real Pallas build.
+    """
+    return _paged_prefill_common(q, k_pages, v_pages, k_new, v_new,
+                                 tables, offset, length, kv_index, interpret,
+                                 k_scale=k_scale, v_scale=v_scale)
+
+
+@_with_env_interpret
 @functools.partial(jax.jit, static_argnames=("kv_index", "block_k",
                                              "interpret"))
 def gqa_decode_ragged(q, k_cache, v_cache, index, k_new, v_new, *,

@@ -524,3 +524,38 @@ def paged_prefill_attention(q, k_pages, v_pages, table, offset, length,
     scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v_full)
+
+
+def paged_verify_attention(q, k_pages, v_pages, table, offset, length,
+                           k_new, v_new,
+                           kv_index: np.ndarray | None = None,
+                           backend: str = "xla",
+                           k_scale=None, v_scale=None) -> jax.Array:
+    """Speculative-decode VERIFY attention over a paged KV cache.
+
+    The target model scores a slot's k drafted tokens in one batched
+    step.  Mathematically this is ``paged_prefill_attention`` exactly:
+    the "chunk" is the drafted span ``[offset, length)`` (W = draft
+    width, columns past ``length - offset`` are per-row padding for
+    shrunk drafts), and the pool contributes the committed prefix
+    ``[0, offset)``.  The HOST path therefore delegates to the prefill
+    reference verbatim; the ACCEL path routes through the verify-named
+    kernel wrappers (``kernels.ops.paged_gqa_verify`` / ``_int8``) so
+    the serve engine registers verify as a DISTINCT binary — the
+    Xar-Trek runtime's migration log and ``summary()`` accounting then
+    see draft and verify calls independently per target.
+    """
+    if backend == "pallas":
+        from repro.kernels import ops as kernel_ops
+        kvt = _static_kv_index(kv_index)
+        if k_scale is not None:
+            return kernel_ops.paged_gqa_verify_int8(
+                q, k_pages, k_scale, v_pages, v_scale, k_new, v_new,
+                table, offset, length, kv_index=kvt)
+        return kernel_ops.paged_gqa_verify(
+            q, k_pages, v_pages, k_new, v_new, table, offset, length,
+            kv_index=kvt)
+    return paged_prefill_attention(q, k_pages, v_pages, table, offset,
+                                   length, k_new, v_new, kv_index=kv_index,
+                                   backend="xla", k_scale=k_scale,
+                                   v_scale=v_scale)

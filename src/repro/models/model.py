@@ -222,6 +222,124 @@ class Model:
             batch["top_p"], batch["seed"], batch["length"])
         return toks, logps, chunk_cache
 
+    def decode_verify(self, params, cache, batch, backend: str = "xla"
+                      ) -> tuple[jax.Array, jax.Array, dict]:
+        """Speculative-decode verify step: score W candidate tokens per
+        row in ONE forward over the paged pool, sample EVERY column, and
+        scatter the candidates' KV into the pool in-graph.
+
+        batch: {"tokens": (B, W) candidates — column 0 is the row's
+        committed last token, columns 1.. the drafted tokens;
+        "offset": (B,) committed KV position (column j sits at absolute
+        position offset + j); "length": (B,) = offset + n_valid;
+        "n_valid": (B,) real candidate count (rows shrunk below W by
+        policy/budget pad with masked columns); "block_table": (B, NBT)}
+        plus the (B,) sampling vectors.  Column j samples the token at
+        absolute position ``offset + j + 1`` with the SAME
+        ``fold_in(seed, position)`` key sequential decode would use —
+        that is the whole byte-identity argument: the verify pass
+        re-derives exactly the tokens one-at-a-time decode would have
+        produced, and the engine keeps the longest drafted prefix that
+        matches them.
+
+        The candidates' per-layer KV is scattered into the (donated)
+        pool here, masked to ``n_valid`` — rejected-tail columns beyond
+        a row's real span land in the junk block 0, so rollback is free:
+        nothing ever reads them (pool-junk isolation is tested).
+        Returns ((B, W) int32 tokens, (B, W) f32 logprobs, new_cache).
+        """
+        from repro.models import sampling as sampling_lib
+        fwd = {k: v for k, v in batch.items()
+               if k not in sampling_lib.SAMPLING_KEYS and k != "n_valid"}
+        logits, chunk_cache, _ = tf_lib.forward_verify_paged(
+            params, fwd, self.cfg, self.geom, self.mesh, cache,
+            backend=backend)
+        if logits.ndim != 3:
+            raise NotImplementedError(
+                "in-graph sampling supports single-codebook logits only")
+        B, W = batch["tokens"].shape
+        offset = batch["offset"].astype(jnp.int32)
+        n_valid = batch["n_valid"].astype(jnp.int32)
+        pos = offset[:, None] + 1 + jnp.arange(W)[None, :]      # (B, W)
+        rep = {k: jnp.repeat(batch[k], W)
+               for k in sampling_lib.SAMPLING_KEYS}
+        toks, logps = sampling_lib.sample_tokens(
+            logits.reshape(B * W, -1), rep["temperature"], rep["top_k"],
+            rep["top_p"], rep["seed"], pos.reshape(-1))
+        toks = toks.reshape(B, W)
+        logps = logps.reshape(B, W).astype(jnp.float32)
+
+        # fused candidate-KV scatter: columns < n_valid write their
+        # logical position's (block, offset); masked columns write the
+        # junk block (0, 0) — duplicate junk writes are benign
+        table = batch["block_table"]
+        NBT = table.shape[1]
+        bs = cache["k"].shape[2]
+        posn = offset[:, None] + jnp.arange(W)[None, :]          # (B, W)
+        valid = ((jnp.arange(W)[None, :] < n_valid[:, None])
+                 & (posn // bs < NBT))
+        blk = jnp.where(
+            valid,
+            jnp.take_along_axis(table, jnp.clip(posn // bs, 0, NBT - 1),
+                                axis=1), 0)
+        off = jnp.where(valid, posn % bs, 0)
+        new_cache = dict(cache)
+        for name, part in chunk_cache.items():
+            pool = cache[name]
+            if part.shape[-1] != pool.shape[-1]:     # lane-aligned pool
+                part = jnp.pad(part, ((0, 0),) * (part.ndim - 1)
+                               + ((0, pool.shape[-1] - part.shape[-1]),))
+            new_cache[name] = pool.at[:, blk, off].set(
+                part.astype(pool.dtype))
+        return toks, logps, new_cache
+
+    def decode_draft(self, params, cache, batch, backend: str = "xla", *,
+                     max_steps: int = 4
+                     ) -> tuple[jax.Array, jax.Array, dict]:
+        """Fused draft chain for speculative decoding: run up to
+        ``max_steps`` chained single-token decode steps in ONE dispatch,
+        feeding each sampled token back in.
+
+        batch: {"tokens": (B, 1) the committed last token, "index": (B,)
+        its dense-cache write position, "n_steps": () traced live step
+        count (max over the batch's per-row draft budgets — lowers to a
+        while_loop, so shrinking k never recompiles)} plus the (B,)
+        sampling vectors.  Step i feeds its token at position
+        ``index + i`` and samples position ``index + i + 1`` with the
+        standard fold_in key, exactly like sequential decode on the
+        draft model.  Returns ((B, max_steps) int32 drafts — column i
+        is the token sampled at ``index + i + 1``; steps >= n_steps
+        leave zeros —, matching (B, max_steps) f32 logprobs, and the
+        updated dense draft cache, whose write frontier advances to
+        ``index + n_steps`` (the last sampled token is NOT written).
+        """
+        from repro.models import sampling as sampling_lib
+        B = batch["tokens"].shape[0]
+        idx0 = batch["index"].astype(jnp.int32)                  # (B,)
+        n_steps = jnp.minimum(batch["n_steps"].astype(jnp.int32),
+                              max_steps)
+        drafts0 = jnp.zeros((B, max_steps), jnp.int32)
+        logps0 = jnp.zeros((B, max_steps), jnp.float32)
+
+        def step(i, carry):
+            tok, cache, drafts, logps = carry
+            logits, cache = self.decode(
+                params, cache, {"tokens": tok, "index": idx0 + i},
+                backend=backend)
+            t, lp = sampling_lib.sample_tokens(
+                logits[:, -1, :], batch["temperature"], batch["top_k"],
+                batch["top_p"], batch["seed"], idx0 + i + 1)
+            drafts = jax.lax.dynamic_update_slice(
+                drafts, t[:, None].astype(jnp.int32), (0, i))
+            logps = jax.lax.dynamic_update_slice(
+                logps, lp[:, None].astype(jnp.float32), (0, i))
+            return (t[:, None].astype(jnp.int32), cache, drafts, logps)
+
+        _, cache, drafts, logps = jax.lax.fori_loop(
+            0, n_steps, step,
+            (batch["tokens"].astype(jnp.int32), cache, drafts0, logps0))
+        return drafts, logps, cache
+
     def decode_sampled(self, params, cache, batch, backend: str = "xla"
                        ) -> tuple[jax.Array, jax.Array, dict]:
         """``decode`` with in-graph per-request sampling fused into the

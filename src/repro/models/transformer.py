@@ -652,7 +652,7 @@ def _forward_decode_paged(params, batch, cfg, geom, mesh, cache, x, positions,
 
 
 def forward_prefill_paged(params, batch, cfg, geom, mesh, cache,
-                          backend: str = "xla"):
+                          backend: str = "xla", attn_fn=None):
     """Chunked prefill over a paged KV cache (prefix caching).
 
     The chunk's tokens EXTEND a prefix already resident in the block
@@ -679,7 +679,14 @@ def forward_prefill_paged(params, batch, cfg, geom, mesh, cache,
     pool-dtype leaves — note the chunk attends over ROUNDED prefix KV,
     which is exactly why lossy pools sit behind
     ``allow_lossy_prefix_cache`` (serve/README.md tolerance story).
+
+    ``attn_fn`` swaps the per-layer attention implementation (default
+    ``attn_lib.paged_prefill_attention``); it must share that ABI.
+    ``forward_verify_paged`` uses it to thread the verify-named wrapper
+    through the same body.
     """
+    if attn_fn is None:
+        attn_fn = attn_lib.paged_prefill_attention
     x = embed_inputs(params, batch, cfg)
     B, W = x.shape[0], x.shape[1]
     offset = batch["offset"].astype(jnp.int32)         # (B,)
@@ -698,7 +705,7 @@ def forward_prefill_paged(params, batch, cfg, geom, mesh, cache,
             kscp = vscp = None
         xn = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         q, k, v = qkv_project(xn, lp, cfg, geom, positions)
-        out = attn_lib.paged_prefill_attention(
+        out = attn_fn(
             q, kcp, vcp, table, offset, length, k_new=k, v_new=v,
             kv_index=kv_idx, backend=backend, k_scale=kscp, v_scale=vscp)
         x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
@@ -725,3 +732,24 @@ def forward_prefill_paged(params, batch, cfg, geom, mesh, cache,
         chunk_cache = {"k": k_all.astype(cdt), "v": v_all.astype(cdt)}
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return output_logits(params, x, cfg), chunk_cache, aux
+
+
+def forward_verify_paged(params, batch, cfg, geom, mesh, cache,
+                         backend: str = "xla"):
+    """Speculative-decode verify forward: score W candidate tokens per
+    row in one batched step over the paged pool.
+
+    Identical body to ``forward_prefill_paged`` — verify IS chunk
+    prefill at offset (batch: ``tokens`` (B, W) = the fed candidates,
+    ``offset`` (B,) committed position, ``length`` (B,) =
+    ``offset + n_valid``, ``block_table``) — but attention routes
+    through ``attn_lib.paged_verify_attention`` so the ACCEL build hits
+    the verify-named Pallas wrapper and the runtime accounts verify
+    calls separately from chunked prefill.  Returns the full
+    (logits (B, W, V), chunk_cache (L, B, W, KV, hd), aux) triple; the
+    caller samples every column (positions ``offset + 1 + j``) and
+    scatters only the accepted prefix's KV.
+    """
+    return forward_prefill_paged(params, batch, cfg, geom, mesh, cache,
+                                 backend=backend,
+                                 attn_fn=attn_lib.paged_verify_attention)

@@ -604,6 +604,19 @@ class PagedSlotManager(SlotManager):
         block the slot does not hold yet."""
         return slot.pos // self.block_size >= len(slot.blocks)
 
+    def fanout_blocks(self, slot: Slot, n_positions: int) -> int:
+        """Blocks the slot must ADD so positions
+        ``[pos, pos + n_positions)`` are all backed — the speculative
+        fan-out reservation: a spec round may write up to k candidate
+        positions of KV before knowing how many survive verification.
+        The engine allocates these onto ``slot.blocks`` BEFORE the
+        round; rejected tails simply leave the last block(s) partly
+        unwritten (stale-beyond-pos, masked like any other), so
+        rollback never frees — and can never corrupt — shared or
+        prefix-cached blocks."""
+        return max(self.blocks_for(slot.pos + n_positions)
+                   - len(slot.blocks), 0)
+
     # ------------------------------------------------------ prefix caching
     def matchable_blocks(self, tokens) -> int:
         """Non-mutating probe: how many consecutive full blocks of

@@ -57,6 +57,7 @@ from repro.serve.batch import (
     KVSpan, PagedSlotManager, PartialPrefill, Slot, SlotManager,
 )
 from repro.serve.scheduler import RequestQueue
+from repro.serve import spec as spec_lib
 
 _BACKEND_DEPRECATION_WARNED = False
 _ON_STEP_DEPRECATION_WARNED = False
@@ -162,6 +163,31 @@ def prompt_bucket(n: int, min_bucket: int = 8) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def spec_verify_batch(vb: dict) -> dict:
+    """Assemble the multi-token verify batch IN-GRAPH from the draft
+    chain's device-resident output, so the round needs no host sync
+    between the two dispatches.  ``vb`` carries ``drafts`` (B, W) as
+    produced by the chain plus the SAME ``last``/``pos`` vectors the
+    chain consumed; row i's verify feed is [last_i, d_1..d_{n-1}] at
+    offset pos_i — bitwise the batch the host loop used to build, with
+    inactive rows (n_valid == 0) masked to the junk self-attention at
+    offset 0 whose writes land in junk block 0."""
+    vb = dict(vb)
+    drafts = vb.pop("drafts")
+    last, pos = vb.pop("last"), vb.pop("pos")
+    n = vb["n_valid"]
+    W = drafts.shape[1]
+    cols = jnp.arange(W, dtype=jnp.int32)[None, :]
+    # last rides as the (B, 1) token_vector the CHAIN consumed — the
+    # column concatenates directly, no per-round slice dispatch
+    toks = jnp.concatenate([last, drafts[:, :W - 1]], axis=1)
+    keep = (n[:, None] > 0) & (cols < n[:, None])
+    vb["tokens"] = jnp.where(keep, toks, 0).astype(jnp.int32)
+    vb["offset"] = jnp.where(n > 0, pos, 0).astype(jnp.int32)
+    vb["length"] = jnp.where(n > 0, pos + n, W).astype(jnp.int32)
+    return vb
 
 
 # cache dtypes that represent every value of the compute dtype exactly
@@ -271,6 +297,31 @@ class ContinuousBatchingEngine:
     request decode-ready — ``serve/cluster.py`` routes the spans over
     the scheduler control plane.
 
+    **Speculative decoding** (``spec_decode=True``, paged only): each
+    scheduler round a cheap DRAFT model — a layer-truncated share of
+    the target's own weights (``serve/spec.py``) with a dense
+    full-precision scratch cache — proposes up to ``spec_draft_len``
+    tokens per slot in ONE fused chained dispatch, and the target
+    verifies all of them in ONE multi-token prefill-at-offset step.
+    The engine emits the longest drafted prefix matching verify's own
+    samples plus verify's first divergent token; since every emitted
+    token is verify's sample under the same ``fold_in(seed, position)``
+    key sequential decode uses, GREEDY output stays byte-identical to
+    non-speculative serving on every target, and seeded-sampled output
+    is byte-identical across targets/migration/resume for a fixed spec
+    configuration (see serve/spec.py for the ulp caveat vs
+    non-speculative sampling).  Up to k tokens per 2 dispatches
+    replaces k dispatches.  Under a runtime the draft chain
+    and verify register as DISTINCT binaries (``{fn_prefix}_draft`` /
+    ``{fn_prefix}_verify``) so the policy can hold draft-on-HOST /
+    verify-on-ACCEL simultaneously and migrate either; a policy
+    exposing ``draft_len(signals, default)`` (``LatencyAwarePolicy``)
+    shrinks k under queue pressure, 0 disabling speculation for the
+    step.  Fan-out blocks reserved for candidate positions stay on the
+    slot when drafts are rejected (never freed mid-round — see
+    ``PagedSlotManager.fanout_blocks``), so rollback cannot corrupt
+    shared prefix-cached blocks.
+
     A request whose ``stop_tokens`` fires finishes that step: its slot —
     and, under paging, its blocks — frees immediately for queued
     arrivals instead of idling out the ``max_new_tokens`` budget.
@@ -332,6 +383,9 @@ class ContinuousBatchingEngine:
                  policy: Optional[SchedulingPolicy] = None,
                  backend: str = "auto", eager_accel: bool = True,
                  prefill_tokens_per_step: Optional[int] = None,
+                 spec_decode: bool = False, spec_draft_len: int = 4,
+                 spec_draft_layers: Optional[int] = None,
+                 spec_draft_params=None, spec_draft_config=None,
                  on_step=None):
         global _BACKEND_DEPRECATION_WARNED, _ON_STEP_DEPRECATION_WARNED
         if cfg.family not in ("dense", "vlm"):
@@ -363,6 +417,15 @@ class ContinuousBatchingEngine:
                     "paged=True: chunks scatter into pool blocks")
             if prefill_tokens_per_step < 1:
                 raise ValueError("prefill_tokens_per_step must be >= 1")
+        if spec_decode:
+            if not paged:
+                raise ValueError(
+                    "spec_decode=True requires paged=True: the verify "
+                    "step is a multi-token prefill-at-offset over the "
+                    "paged pool, and the fan-out/rollback story lives "
+                    "at block granularity")
+            if spec_draft_len < 1:
+                raise ValueError("spec_draft_len must be >= 1")
         if backend not in ("host", "accel", "auto"):
             raise ValueError(f"backend must be host|accel|auto: {backend!r}")
         if backend != "auto":
@@ -476,8 +539,31 @@ class ContinuousBatchingEngine:
                 return {k: pool[k].at[:, dst].set(pool[k][:, src])
                         for k in pool}
 
+            # disaggregated-span rehydration: ONE compile for any span
+            # length.  The generic _scatter above specializes on
+            # phys.shape — one executable (and one full donated pool
+            # pass through the compiler) PER DISTINCT BLOCK COUNT, so a
+            # decode-role engine admitting spans of many prompt lengths
+            # recompiled the whole scatter for each.  Here the span KV
+            # is padded host-side to the table-width worst case and the
+            # pad rows are masked to the reserved junk block 0, so every
+            # admission reuses the same donated executable.
+            def scatter_span(pool, part, phys, n_blocks):
+                out = {}
+                valid = jnp.arange(phys.shape[0]) < n_blocks
+                blk = jnp.where(valid, phys, 0)
+                for k in pool:
+                    p = part[k]        # (L, table_width, block_size, ...)
+                    if p.shape[-1] != pool[k].shape[-1]:
+                        p = jnp.pad(p, ((0, 0),) * (p.ndim - 1)
+                                    + ((0, pool[k].shape[-1]
+                                        - p.shape[-1]),))
+                    out[k] = pool[k].at[:, blk].set(p.astype(pool[k].dtype))
+                return out
+
             self._scatter_chunk = jax.jit(scatter_chunk, donate_argnums=(0,))
             self._copy_block = jax.jit(copy_block, donate_argnums=(0,))
+            self._scatter_span = jax.jit(scatter_span, donate_argnums=(0,))
         else:
             self.slots = SlotManager(max_slots, max_seq)
             self.cache = self.model.init_cache(max_slots, max_seq)
@@ -516,9 +602,56 @@ class ContinuousBatchingEngine:
                     * (cache[k].ndim - 2))
                 for k in cache},
             donate_argnums=(0,))
+        # speculative decoding: the draft side is a layer-truncated
+        # SHARE of the target (serve/spec.py) with its own dense
+        # full-precision scratch cache, widened by draft_len so the
+        # chain's last write never clamps at the row edge.  Draft chain
+        # and verify are separate step functions — under a runtime they
+        # register as DISTINCT migratable binaries ({prefix}_draft /
+        # {prefix}_verify), so the policy can hold draft-on-HOST /
+        # verify-on-ACCEL simultaneously and summary() accounts both.
+        self.spec: Optional[spec_lib.SpecDecoder] = None
+        if spec_decode:
+            dcfg = (spec_draft_config if spec_draft_config is not None
+                    else spec_lib.draft_model_config(cfg, spec_draft_layers))
+            draft_model = build_model(dcfg, mesh)
+            dparams = (spec_draft_params if spec_draft_params is not None
+                       else spec_lib.share_draft_params(self.params,
+                                                        dcfg.num_layers))
+            dcache = draft_model.init_cache(max_slots,
+                                            max_seq + spec_draft_len)
+            self.spec = spec_lib.SpecDecoder(
+                model=draft_model, cfg=dcfg, params=dparams, cache=dcache,
+                draft_len=spec_draft_len)
+            self._spec_width = max_seq + spec_draft_len
+            # content-addressed host->device cache for the small
+            # per-round batch vectors that rarely change between rounds
+            # (sampling leaves, block table, n_valid) — see _spec_put
+            self._spec_dev_cache: dict = {}
+            # lazy draft-row rehydration (fresh admission / resume /
+            # fingerprint miss) always runs on the direct path: it is
+            # rare and off the per-round dispatch cadence, so it is not
+            # a migration surface
+            self._draft_prefill = jax.jit(
+                lambda p, b: draft_model.prefill_at_sampled(
+                    p, b, backend=direct))
+            self._draft_chain = jax.jit(
+                lambda p, c, b: draft_model.decode_draft(
+                    p, c, b, backend=direct, max_steps=spec_draft_len),
+                donate_argnums=(1,))
+            # verify consumes the chain's DEVICE-resident drafts and
+            # assembles its token/offset/length batch in-graph
+            # (spec_verify_batch), so a round has exactly one host sync
+            # — after verify — instead of one per dispatch
+            self._verify = jax.jit(
+                lambda p, c, b: self.model.decode_verify(
+                    p, c, spec_verify_batch(b), backend=direct),
+                donate_argnums=(1,))
         self._prefill_name = f"{fn_prefix}_prefill"
         self._prefill_ctx_name = f"{fn_prefix}_prefill_ctx"
         self._decode_name = f"{fn_prefix}_decode"
+        self._draft_name = f"{fn_prefix}_draft"
+        self._verify_name = f"{fn_prefix}_verify"
         self.engine_id = fn_prefix
         self.results: dict[int, RequestOutput] = {}
         # req_id -> (tokens, logprobs) generated before preemption
@@ -537,6 +670,12 @@ class ContinuousBatchingEngine:
         # requests' latency metrics
         self._direct_step_ms: dict[str, Optional[float]] = {
             "host": None, "accel": None}
+        # EWMA of per-iteration decode stall (ms spent on chunk prefills
+        # while decode-ready slots waited) — the feedback signal
+        # LatencyAwarePolicy.prefill_budget contracts on.  Steps with no
+        # chunk work blend in 0.0 so a past burst decays instead of
+        # pinning the budget down forever.
+        self._stall_ewma: Optional[float] = None
         self._latency_window: collections.deque = collections.deque(
             maxlen=64)
         self.reset_stats()
@@ -559,7 +698,27 @@ class ContinuousBatchingEngine:
                       "prefill_tokens": 0, "prefix_hit_tokens": 0,
                       "prefill_chunks": 0, "decode_stall_ms": 0.0,
                       "decode_stall_max_ms": 0.0,
-                      "chunk_hist": {}, "spans_admitted": 0}
+                      "chunk_hist": {}, "spans_admitted": 0,
+                      "spec_rounds": 0, "spec_proposed_tokens": 0,
+                      "spec_accepted_tokens": 0, "spec_emitted_tokens": 0}
+
+    def spec_stats(self) -> dict:
+        """Speculative-decoding effectiveness counters (zeros when spec
+        decode is off).  ``spec_proposed_tokens`` counts DRAFTED tokens
+        actually put to the verifier (n_valid - 1 per row per round),
+        ``spec_accepted_tokens`` how many of those verify confirmed —
+        their ratio is the acceptance rate.  ``spec_emitted_tokens``
+        counts tokens emitted by spec rounds (accepted + the one
+        verify-sampled token each row always yields, truncated at
+        stop tokens), so emitted/rounds is tokens-per-dispatch-pair."""
+        s = self.stats
+        return {"spec_rounds": s["spec_rounds"],
+                "spec_proposed_tokens": s["spec_proposed_tokens"],
+                "spec_accepted_tokens": s["spec_accepted_tokens"],
+                "spec_emitted_tokens": s["spec_emitted_tokens"],
+                "spec_acceptance_rate": (s["spec_accepted_tokens"]
+                                         / max(s["spec_proposed_tokens"],
+                                               1))}
 
     def prefix_stats(self) -> dict:
         """Prefix-cache effectiveness counters (zeros when caching is
@@ -627,6 +786,7 @@ class ContinuousBatchingEngine:
             accel_decode_ms=accel_ms,
             ttft_p50_s=ttft[len(ttft) // 2] if ttft else None,
             tpot_p50_s=tpot[len(tpot) // 2] if tpot else None,
+            decode_stall_ms=self._stall_ewma,
         )
 
     def _publish_signals(self) -> None:
@@ -725,6 +885,64 @@ class ContinuousBatchingEngine:
                            (1, self.slots.table_width), jnp.int32),
                        **sampling_leaves(greedy, 1)})
             rt.prepare(self._prefill_ctx_name, *ex_ctx,
+                       eager_accel=eager_accel)
+        if self.spec is not None:
+            # speculative decoding registers TWO MORE distinct binaries:
+            # the fused k-step draft chain and the multi-token verify.
+            # Each gets its own threshold row / call counters, so the
+            # headline draft-on-HOST / verify-on-ACCEL split is a real
+            # per-function placement the scheduler (and summary()) sees —
+            # and migrating either is a kernel swap like any other step.
+            draft_model, W = self.spec.model, self.spec.draft_len
+
+            def draft_fn(impl):
+                def fn(params, cache, batch):
+                    return draft_model.decode_draft(params, cache, batch,
+                                                    backend=impl,
+                                                    max_steps=W)
+                return fn
+
+            def verify_fn(impl):
+                def fn(params, cache, batch):
+                    return self.model.decode_verify(
+                        params, cache, spec_verify_batch(batch),
+                        backend=impl)
+                return fn
+
+            host_draft = draft_fn("xla")
+            # the draft cache is always full-precision dense (see
+            # spec.draft_model_config), so its ACCEL build is the real
+            # Pallas flash-decode even when the TARGET pool is int8
+            accel_draft = (draft_fn("pallas")
+                           if not isinstance(self.policy, PinHost)
+                           else host_draft)
+            host_verify = verify_fn("xla")
+            accel_verify = (verify_fn("pallas") if accel_impl == "pallas"
+                            else host_verify)
+            for name, host_fn, accel_fn in (
+                    (self._draft_name, host_draft, accel_draft),
+                    (self._verify_name, host_verify, accel_verify)):
+                if name not in rt.registry:
+                    rt.registry.register(MigratableFunction(
+                        name, name, {TargetKind.HOST: host_fn,
+                                     TargetKind.ACCEL: accel_fn}))
+            B = self.slots.max_slots
+            ex_draft = (self.spec.params, self.spec.cache,
+                        {"tokens": jnp.zeros((B, 1), jnp.int32),
+                         "index": jnp.zeros((B,), jnp.int32),
+                         "n_steps": jnp.int32(1),
+                         **sampling_leaves(greedy, B)})
+            ex_verify = (self.params, self.cache,
+                         {"drafts": jnp.zeros((B, W), jnp.int32),
+                          "last": jnp.zeros((B, 1), jnp.int32),
+                          "pos": jnp.zeros((B,), jnp.int32),
+                          "n_valid": jnp.zeros((B,), jnp.int32),
+                          "block_table": jnp.zeros(
+                              (B, self.slots.table_width), jnp.int32),
+                          **sampling_leaves(greedy, B)})
+            rt.prepare(self._draft_name, *ex_draft, donate_argnums=(1,),
+                       eager_accel=eager_accel)
+            rt.prepare(self._verify_name, *ex_verify, donate_argnums=(1,),
                        eager_accel=eager_accel)
 
     # -------------------------------------------------------- admission
@@ -1092,6 +1310,10 @@ class ContinuousBatchingEngine:
         slots sit waiting is the decode stall the budget knob bounds."""
         pending = self.slots.prefilling_slots()
         if not pending:
+            # no chunk work: decay the stall signal toward zero so the
+            # policy's stall-feedback contraction releases once the
+            # prefill burst that caused it has drained
+            self._stall_ewma = ewma(self._stall_ewma, 0.0)
             return
         t0 = time.perf_counter()
         stalled = bool(self.slots.active_slots())
@@ -1108,6 +1330,9 @@ class ContinuousBatchingEngine:
             # worst single-step stall: the SLO number the budget bounds
             self.stats["decode_stall_max_ms"] = max(
                 self.stats["decode_stall_max_ms"], ms)
+            self._stall_ewma = ewma(self._stall_ewma, ms)
+        else:
+            self._stall_ewma = ewma(self._stall_ewma, 0.0)
 
     def _prefill_chunk(self, slot: Slot, n_chunk: int) -> None:
         """Advance one slot's prefill by ``n_chunk`` feed tokens.  Full
@@ -1190,13 +1415,27 @@ class ContinuousBatchingEngine:
                     now: float) -> None:
         """Rehydrate a handed-off prefill: scatter the span's block KV
         (already pool-dtype) into freshly allocated local blocks and
-        admit the slot decode-ready at pos = prompt length."""
+        admit the slot decode-ready at pos = prompt length.
+
+        The scatter is the fused static-signature ``_scatter_span``:
+        the span KV is padded host-side to the table-width worst case
+        (pad blocks route to junk block 0), so spans of EVERY length
+        share one compiled donate-in-place executable — the per-block-
+        count specializing ``_scatter`` recompiled (and re-traversed
+        the whole pool for) each distinct span size."""
         S = len(span.prompt)
         blocks = self.slots.pool.alloc(self.slots.blocks_for(S))
-        part = {k: jnp.asarray(v.reshape(v.shape[0], 1, -1, *v.shape[3:]))
-                for k, v in span.kv.items()}
-        self.cache = self._scatter(self.cache, part,
-                                   jnp.asarray(blocks, jnp.int32))
+        W = self.slots.table_width
+        phys = np.zeros((W,), np.int32)
+        phys[:len(blocks)] = blocks
+        part = {}
+        for k, v in span.kv.items():   # (L, n_blocks, block_size, ...)
+            pad = np.zeros((v.shape[0], W - v.shape[1]) + v.shape[2:],
+                           v.dtype)
+            part[k] = jnp.asarray(np.concatenate([v, pad], axis=1))
+        self.cache = self._scatter_span(self.cache, part,
+                                        jnp.asarray(phys),
+                                        jnp.int32(len(blocks)))
         slot = self.slots.admit(req, span.first_token, blocks=blocks,
                                 first_logprob=span.first_logprob, pos=S)
         if self.prefix_cache:
@@ -1343,6 +1582,212 @@ class ContinuousBatchingEngine:
             if slot.done:
                 self._finish(slot, now)
 
+    # ------------------------------------------------ speculative decode
+    def _draft_len(self) -> int:
+        """Draft length k for this round: the policy's ``draft_len``
+        hook (fed live signals) when it has one, else the engine's
+        configured ``spec_draft_len``.  0 disables speculation for the
+        step (the loop falls back to plain decode); the result is
+        clamped to the compiled verify width."""
+        if self.spec is None:
+            return 0
+        policy = self.policy
+        if policy is None and self.runtime is not None:
+            policy = self.runtime.server.policy
+        hook = getattr(policy, "draft_len", None)
+        k = (hook(self.signals(), self.spec.draft_len)
+             if hook is not None else self.spec.draft_len)
+        return max(0, min(int(k), self.spec.draft_len))
+
+    def _ensure_spec_blocks(self, k: int) -> Optional[dict[int, int]]:
+        """Pre-reserve the speculative fan-out: every decode-ready slot
+        must hold blocks backing positions ``[pos, pos + n)`` BEFORE the
+        round writes up to n candidate positions of KV.  Returns
+        {slot.index: n} with per-slot n = min(k, remaining token
+        budget); when the pool cannot cover a slot's fan-out, its n
+        shrinks to the capacity it already holds rather than preempting
+        mid-round — and if any slot ends at n < 1, returns None so the
+        caller falls back to ``_decode_step`` (whose preempt-youngest
+        loop guarantees progress).  Rejection later never frees these
+        blocks (see ``PagedSlotManager.fanout_blocks``); shared blocks
+        in the write range fork copy-on-write first, exactly like the
+        plain decode path."""
+        bs = self.slots.block_size
+        plan: dict[int, int] = {}
+        for slot in self.slots.active_slots():
+            rem = slot.request.max_new_tokens - len(slot.tokens)
+            n = min(k, max(rem, 0))
+            need = self.slots.fanout_blocks(slot, n)
+            if need > self.slots.pool.free_blocks():
+                # pool short: spend only the capacity already held
+                n = min(n, len(slot.blocks) * bs - slot.pos)
+                need = 0
+            if n < 1:
+                return None
+            if need:
+                slot.blocks.extend(self.slots.pool.alloc(need))
+            if self.prefix_cache:
+                # a spec round writes a RANGE of blocks, not just the
+                # tail — COW-fork any shared one before the scatter
+                # touches it (fresh fan-out blocks are private already)
+                for bi in range(slot.pos // bs, (slot.pos + n - 1) // bs
+                                + 1):
+                    if self.slots.pool.refcount.get(slot.blocks[bi],
+                                                    0) <= 1:
+                        continue
+                    try:
+                        blocks, copy = self.slots.ensure_writable(
+                            slot.blocks, bi)
+                    except RuntimeError:
+                        return None    # no block for the fork: fall back
+                    if copy is not None:
+                        src, dst = copy
+                        self.cache = self._copy_block(
+                            self.cache, jnp.int32(dst), jnp.int32(src))
+                        slot.blocks = blocks
+                        slot.block_hashes = slot.block_hashes[:bi]
+            plan[slot.index] = n
+        return plan or None
+
+    def _refresh_draft(self, slot: Slot) -> None:
+        """Rebuild one slot's draft-cache row from its committed tokens
+        (fresh admission, preempt/resume, or any round the fingerprint
+        misses): a bucketed dense draft prefill over ``_kv_tokens``,
+        written into the row — after which positions < pos are valid
+        and the chain may extend from there."""
+        toks = self._kv_tokens(slot)
+        S = len(toks)
+        Sb = prompt_bucket(S, self.min_bucket)
+        arr = np.zeros((1, Sb), np.int32)
+        arr[0, :S] = toks
+        batch = {"tokens": jnp.asarray(arr),
+                 "length": jnp.full((1,), S, jnp.int32),
+                 **sampling_leaves(SamplingParams(), 1)}
+        _, _, pc = self._draft_prefill(self.spec.params, batch)
+        if Sb > self._spec_width:      # bucket overhangs the row
+            pc = {k: jax.lax.slice_in_dim(pc[k], 0, self._spec_width,
+                                          axis=2) for k in pc}
+        self.spec.cache = self._write_slot(self.spec.cache, pc,
+                                           jnp.int32(slot.index))
+        self.spec.mark(slot.index, slot.request.req_id, slot.pos)
+
+    def _spec_put(self, key: str, arr: np.ndarray):
+        """Device copy of a small per-round host vector, reused across
+        rounds while its CONTENT is unchanged (content-addressed, so it
+        can never serve stale values): sampling leaves only change on
+        admission/finish, the block table every block_size tokens,
+        n_valid on plan changes — re-uploading them every round was a
+        measurable slice of the round's host overhead."""
+        ent = self._spec_dev_cache.get(key)
+        b = arr.tobytes()
+        if ent is not None and ent[0] == b:
+            return ent[1]
+        dev = jnp.asarray(arr)
+        self._spec_dev_cache[key] = (b, dev)
+        return dev
+
+    def _spec_step(self, k: int) -> bool:
+        """One speculative round: fused k-step draft chain, then ONE
+        multi-token verify, then host-side longest-accepted-prefix
+        acceptance.  Emits 1..k tokens per slot — every emitted token
+        is VERIFY'S OWN sample at its position, so output is
+        byte-identical to sequential decode on any target split.
+        Returns False (round not run) when the fan-out cannot be
+        reserved; the caller then takes the plain decode path."""
+        plan = self._ensure_spec_blocks(k)
+        if plan is None:
+            return False
+        active = [s for s in self.slots.active_slots()
+                  if s.index in plan]
+        if not active:
+            return False
+        for slot in active:
+            if not self.spec.valid_for(slot.index, slot.request.req_id,
+                                       slot.pos):
+                self._refresh_draft(slot)
+        B, W = self.slots.max_slots, self.spec.draft_len
+        n_valid = np.zeros((B,), np.int32)
+        for slot in active:
+            n_valid[slot.index] = plan[slot.index]
+        n_steps = int(n_valid.max())
+        # 1 fused dispatch: the chain runs n_steps draft decodes,
+        # feeding each sample back in and writing draft KV as it goes.
+        # Convert the host vectors ONCE — tokens/index double as the
+        # verify batch's last/pos (index_vector IS slot.pos), and the
+        # sampling leaves are shared by both dispatches.
+        tokvec = jnp.asarray(self.slots.token_vector())
+        idxvec = jnp.asarray(self.slots.index_vector())
+        sv = {k: self._spec_put("sv_" + k, v)
+              for k, v in self.slots.sampling_vectors().items()}
+        dbatch = {"tokens": tokvec, "index": idxvec,
+                  "n_steps": jnp.int32(n_steps), **sv}
+        if self.runtime is not None:
+            drafts, _, self.spec.cache = self.runtime.call(
+                self._draft_name, self.spec.params, self.spec.cache,
+                dbatch)
+        else:
+            drafts, _, self.spec.cache = self._draft_chain(
+                self.spec.params, self.spec.cache, dbatch)
+        # 1 fused dispatch: verify feeds [t0, d_1..d_{n-1}] at offset
+        # pos and samples the target's token at EVERY position.  The
+        # drafts stay ON DEVICE — spec_verify_batch assembles the
+        # token/offset/length feed in-graph, so the chain->verify edge
+        # never round-trips through the host and the only sync in the
+        # round is pulling verify's samples below.
+        vbatch = {"drafts": drafts, "last": tokvec, "pos": idxvec,
+                  "n_valid": self._spec_put("n_valid", n_valid),
+                  "block_table": self._spec_put(
+                      "bt", self.slots.block_table()),
+                  **sv}
+        if self.runtime is not None:
+            vtoks, vlogps, self.cache = self.runtime.call(
+                self._verify_name, self.params, self.cache, vbatch)
+            vtoks = np.asarray(vtoks)
+        else:
+            t0 = time.perf_counter()
+            vtoks, vlogps, self.cache = self._verify(self.params,
+                                                     self.cache, vbatch)
+            vtoks = np.asarray(vtoks)      # forces chain + verify
+            ms = (time.perf_counter() - t0) * 1e3
+            tgt = "accel" if self._direct_impl == "pallas" else "host"
+            self._direct_step_ms[tgt] = ewma(self._direct_step_ms[tgt],
+                                             ms)
+        drafts = np.asarray(drafts)        # (B, W): col i = d_{i+1}
+        vlogps = np.asarray(vlogps)
+        emit = spec_lib.acceptance_lengths(drafts[:, :max(W - 1, 0)],
+                                           vtoks, n_valid)
+        now = self._now()
+        self.stats["spec_rounds"] += 1
+        for slot in active:
+            i, n, e = slot.index, int(n_valid[slot.index]), 0
+            self.stats["spec_proposed_tokens"] += n - 1
+            self.stats["spec_accepted_tokens"] += emit[i] - 1
+            for j in range(emit[i]):
+                t = int(vtoks[i, j])
+                slot.tokens.append(t)
+                slot.logprobs.append(float(vlogps[i, j]))
+                slot.last_token = t
+                slot.pos += 1
+                e += 1
+                if (self.prefix_cache
+                        and slot.pos % self.slots.block_size == 0):
+                    self.slots.register_full_blocks(
+                        slot, self._kv_tokens(slot))
+                if slot.request.stops(t):
+                    # sequential decode would have finished HERE: the
+                    # accepted tail past a stop token must not emit
+                    break
+            self.stats["spec_emitted_tokens"] += e
+            slot.t_last_token = now
+            # draft KV through the new pos holds exactly the committed
+            # tokens' keys (accepted drafts == verify samples), so the
+            # next round extends without re-prefilling
+            self.spec.mark(i, slot.request.req_id, slot.pos)
+            self._sync_handle(slot, now)
+            if slot.done:
+                self._finish(slot, now)
+        return True
+
     def _kv_tokens(self, slot: Slot) -> list[int]:
         """Tokens whose KV the slot's blocks hold, in position order:
         prompt then generated (the decode at step k writes token k's KV
@@ -1390,7 +1835,17 @@ class ContinuousBatchingEngine:
                 if self._chunking:
                     self._advance_prefills(self._step_budget)
                 if self.slots.active:
-                    self._decode_step()
+                    # speculative round when enabled and the policy's
+                    # draft_len allows it (k=0 = plain decode); a round
+                    # that cannot reserve its fan-out also falls back —
+                    # _decode_step's preempt loop guarantees progress
+                    stepped = False
+                    if self.spec is not None:
+                        k = self._draft_len()
+                        if k >= 1:
+                            stepped = self._spec_step(k)
+                    if not stepped:
+                        self._decode_step()
                     if self.on_step is not None:
                         self.on_step(self)
                 else:

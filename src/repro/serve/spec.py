@@ -1,0 +1,174 @@
+"""Speculative decoding support: draft-model plumbing + acceptance rule.
+
+Speculative decoding runs TWO cooperating functions per scheduler round
+instead of one: a cheap DRAFT model proposes k tokens per slot via k
+chained decode steps (one fused dispatch —
+``Model.decode_draft``), and the TARGET model verifies all k in ONE
+batched multi-token step (``Model.decode_verify``, whose attention is
+chunk-prefill-at-offset over the paged pool).  In Xar-Trek terms this
+is the first workload where the runtime keeps two registered binaries
+BUSY AT ONCE on different targets — the headline configuration is
+draft-on-HOST / verify-on-ACCEL, with the scheduling policy free to
+migrate either and to shrink the draft length k under load
+(``SchedulingPolicy.draft_len``).
+
+Correctness contract (the repo's standing invariant): the verify pass
+samples every candidate position with the exact ``fold_in(seed,
+position)`` key sequential decode would use, and the engine emits the
+longest drafted prefix that MATCHES verify's own samples plus verify's
+first divergent token.  Emitted tokens are therefore *verify's* tokens,
+always — the draft only decides how many arrive per dispatch.  GREEDY
+output is byte-identical to non-speculative greedy on every target,
+across migration and preempt/resume (argmax is insensitive to the
+~1-ulp reduction-order differences between the decode and verify
+attention paths).  Seeded SAMPLED output is byte-identical across
+targets / migration / preempt-resume for a FIXED spec configuration
+(every comparand commits verify's draws under the same positional
+keys); against non-speculative sampling it agrees except where those
+ulp-level logit differences flip a draw sitting exactly on a
+categorical threshold — greedy is the identity the acceptance rule
+guarantees unconditionally.
+
+The DRAFT model here is a layer-truncated share of the target: the
+first ``num_layers`` layer slices of the target's stacked parameters
+plus its embedding/head (``share_draft_params``), under a config with a
+full-precision dense KV scratch cache (``draft_model_config``).  That
+keeps the subsystem dependency-free (no second checkpoint), makes the
+draft a genuinely cheaper function of the SAME weights, and gives
+benchmarks a dial: ``zero_top_layers`` zeroes the target's top layers
+(each zeroed layer is an exact residual identity — every contribution
+is multiplied to 0.0 before being added), making the truncated draft
+*exactly* equal to the target so the acceptance rate approaches 1 and
+the speedup bound ~k-per-2-dispatches is observable on random weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+
+from repro.configs.model_config import ModelConfig
+
+
+def draft_model_config(cfg: ModelConfig,
+                       num_layers: int | None = None) -> ModelConfig:
+    """Config for the layer-truncated draft of ``cfg``.
+
+    ``num_layers`` defaults to half the target depth (min 1).  The
+    draft's KV cache is a throwaway dense scratch, so it always stores
+    full precision (``kv_cache_dtype = dtype``) regardless of the
+    target's pool dtype: a lossy draft cache would only lower the
+    acceptance rate, never improve anything — and a dense int8 cache
+    would pin the ACCEL draft build to XLA math (see models/transformer
+    decode), whereas the f32/bf16 dense path is a real Pallas
+    flash-decode build.
+    """
+    depth = (max(1, cfg.num_layers // 2) if num_layers is None
+             else num_layers)
+    if not 1 <= depth <= cfg.num_layers:
+        raise ValueError(
+            f"draft depth {depth} outside 1..{cfg.num_layers}")
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-draft", num_layers=depth,
+        kv_cache_dtype=cfg.dtype)
+
+
+def share_draft_params(params: dict, num_layers: int) -> dict:
+    """Draft parameters as views of the target's: slice the first
+    ``num_layers`` entries of every stacked layer leaf and share the
+    embedding / final norm / head verbatim.  No copy of the big leaves
+    is made until jax stages them (and then only the slices)."""
+    out = dict(params)
+    out["layers"] = jax.tree_util.tree_map(
+        lambda x: x[:num_layers], params["layers"])
+    return out
+
+
+def zero_top_layers(params: dict, keep: int) -> dict:
+    """Zero every layer-stacked leaf at layer index >= ``keep``.
+
+    A fully-zeroed transformer layer is an EXACT residual identity:
+    ln1 = 0 makes the attention input 0, wq/wk/wv = 0 make q/k/v 0, so
+    the attention output is 0 before wo even applies; ln2 = 0 and zero
+    MLP weights make the MLP branch 0; both residual adds contribute
+    exact +0.0.  A target checkpoint passed through this with
+    ``keep = draft depth`` therefore computes the identical function
+    to its ``share_draft_params`` draft — the benchmark's near-1
+    acceptance configuration on random weights.
+    """
+    leaf = jax.tree_util.tree_leaves(params["layers"])[0]
+    L = leaf.shape[0]
+    mask = np.arange(L) < keep
+
+    def z(x):
+        m = mask.reshape((L,) + (1,) * (x.ndim - 1))
+        return x * m.astype(x.dtype)
+
+    out = dict(params)
+    out["layers"] = jax.tree_util.tree_map(z, params["layers"])
+    return out
+
+
+def acceptance_lengths(drafts: np.ndarray, verify: np.ndarray,
+                       n_valid: np.ndarray) -> list[int]:
+    """Per-row emit counts under longest-accepted-prefix acceptance.
+
+    ``drafts`` (B, W-1): drafted tokens d_1..d_{W-1} (column j proposes
+    the token at committed-position + j + 1).  ``verify`` (B, W):
+    verify's own samples g_1..g_W (g_{j+1} sampled from the target's
+    logits at the same position).  ``n_valid`` (B,): how many fed
+    columns were real for the row (<= W; 0 marks an inactive row).
+
+    Row b accepts the longest prefix a with ``drafts[b, i] ==
+    verify[b, i]`` for all i < a (a <= n_valid - 1), then emits
+    ``a + 1`` tokens: the a accepted ones plus verify's token at the
+    first unconfirmed position — exactly the tokens sequential decode
+    would have produced, which is the whole byte-identity argument.
+    Inactive rows emit 0.
+    """
+    out = []
+    for b in range(drafts.shape[0]):
+        n = int(n_valid[b])
+        if n <= 0:
+            out.append(0)
+            continue
+        a = 0
+        while a < n - 1 and int(drafts[b, a]) == int(verify[b, a]):
+            a += 1
+        out.append(a + 1)
+    return out
+
+
+@dataclasses.dataclass
+class SpecDecoder:
+    """Per-engine speculative-decoding state the serve engine composes.
+
+    Holds the draft side (model / cfg / params / dense scratch cache)
+    plus the per-slot draft-cache fingerprints: the draft cache row of
+    slot i is valid for positions ``< pos`` iff ``fingerprints[i] ==
+    (req_id, pos)`` — on mismatch (fresh admission, preempt/resume,
+    rounds the slot sat out) the engine lazily re-prefills the row from
+    the slot's committed tokens before drafting.  Positions at or past
+    the fingerprint's ``pos`` may hold stale junk from earlier rounds;
+    that is safe because chain step i at position ``pos + i`` only
+    attends positions below itself, all either < pos (valid by the
+    fingerprint) or written earlier in the same chain.
+    """
+
+    model: object
+    cfg: ModelConfig
+    params: dict
+    cache: dict
+    draft_len: int
+    fingerprints: dict[int, tuple] = dataclasses.field(default_factory=dict)
+
+    def valid_for(self, index: int, req_id: str, pos: int) -> bool:
+        return self.fingerprints.get(index) == (req_id, pos)
+
+    def mark(self, index: int, req_id: str, pos: int) -> None:
+        self.fingerprints[index] = (req_id, pos)
+
+    def invalidate(self, index: int) -> None:
+        self.fingerprints.pop(index, None)

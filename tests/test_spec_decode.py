@@ -1,0 +1,675 @@
+"""Speculative decoding: draft-on-HOST / verify-on-ACCEL.
+
+Four layers under test, mirroring the implementation stack:
+
+* the verify kernel wrappers (``ops.paged_gqa_verify`` / ``_int8``) —
+  bitwise the chunk-prefill kernel body under a distinct registered
+  name, checked against the gather-then-attend ref oracle across GQA
+  ratios x offsets x draft widths x f32/int8 pools, plus pool-junk
+  isolation (junk beyond the masked window must not leak);
+* the model step functions: ``decode_verify`` (multi-token
+  prefill-at-offset + per-position sampling + masked pool scatter)
+  against k sequential decode steps, and the fused ``decode_draft``
+  chain against manually chained decode+sample;
+* ``serve/spec.py``: the longest-accepted-prefix rule, the
+  layer-truncated draft share, and ``zero_top_layers``' exact residual
+  identity (the bench's ~1.0-acceptance configuration);
+* the engine: GREEDY byte-identity spec-on vs spec-off on HOST, on
+  ACCEL, through a runtime holding draft-on-HOST / verify-on-ACCEL
+  (with per-target call accounting), under forced mid-stream verify
+  migration, across preempt/resume on a starved pool, and with prefix
+  caching; seeded-sampled determinism for a fixed spec config; the
+  policy ``draft_len`` hook.
+
+Satellite regressions ride along: the ``decode_stall_ms`` EWMA ->
+``LatencyAwarePolicy.prefill_budget`` contraction loop, and the
+static-signature ``_scatter_span`` (one compile for every span size,
+byte-identical rehydrated tokens).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.function import FunctionRegistry
+from repro.core.policy import (
+    Decision, LatencyAwarePolicy, LoadSignals, PinAccel,
+)
+from repro.core.runtime import XarTrekRuntime
+from repro.core.targets import TargetKind
+from repro.kernels import ops
+from repro.kernels.ref import (
+    paged_prefill_attention_ref, paged_prefill_attention_int8_ref,
+)
+from repro.models.attention import paged_verify_attention
+from repro.models.common import quantize_int8
+from repro.models.model import build_model
+from repro.models.sampling import sampling_leaves
+from repro.serve import spec as spec_lib
+from repro.serve.api import GenerationRequest, SamplingParams
+from repro.serve.engine import ContinuousBatchingEngine
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(reduced(ARCHS["smollm-135m"]),
+                               dtype="float32", kv_cache_dtype="float32")
+
+
+ENGINE_KW = dict(max_slots=4, max_seq=96, paged=True, block_size=16,
+                 num_blocks=24)
+
+
+@pytest.fixture(scope="module")
+def served(cfg):
+    """(params, prompts, baseline greedy tokens per prompt index)."""
+    eng = ContinuousBatchingEngine(cfg, **ENGINE_KW)
+    rng = np.random.default_rng(1)
+    prompts = [np.asarray(rng.integers(1, cfg.vocab_size,
+                                       size=int(rng.integers(4, 20))),
+                          np.int32) for _ in range(6)]
+    reqs = _reqs(prompts)
+    out = eng.run(reqs)
+    base = [out[r.req_id].tokens for r in reqs]
+    return eng.params, prompts, base
+
+
+def _reqs(prompts, sampling=None, max_new=24):
+    return [GenerationRequest(p, max_new_tokens=max_new,
+                              sampling=sampling or SamplingParams())
+            for p in prompts]
+
+
+def _assert_identical(outs, reqs, base):
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(outs[r.req_id].tokens, base[i],
+                                      err_msg=f"request {i}")
+
+
+# --------------------------------------------- verify kernel wrappers
+
+def _verify_problem(seed, B, KV, G, hd, NP, BS, NBT, W, int8=False):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    rng = np.random.RandomState(seed)
+    kp = jax.random.normal(ks[0], (NP, BS, KV, hd), jnp.float32)
+    vp = jax.random.normal(ks[1], (NP, BS, KV, hd), jnp.float32)
+    tables = jnp.asarray(
+        np.stack([rng.permutation(NP)[:NBT] for _ in range(B)]), jnp.int32)
+    q = jax.random.normal(ks[2], (B, W, KV * G, hd), jnp.float32)
+    kn = jax.random.normal(ks[3], (B, W, KV, hd), jnp.float32)
+    vn = jax.random.normal(ks[4], (B, W, KV, hd), jnp.float32)
+    if not int8:
+        return q, kp, vp, None, None, kn, vn, tables
+    kq, ksc = quantize_int8(kp, axis=-1)
+    vq, vsc = quantize_int8(vp, axis=-1)
+    return q, kq, vq, ksc, vsc, kn, vn, tables
+
+
+def _to_ref_layout(x, KV, G):
+    """(B,W,KV*G,hd) model-facing -> (B,KV,W*G,hd) oracle-facing."""
+    B, W, _, hd = x.shape
+    return jnp.reshape(
+        jnp.transpose(jnp.reshape(x, (B, W, KV, G, hd)), (0, 2, 1, 3, 4)),
+        (B, KV, W * G, hd))
+
+
+def _from_ref_layout(x, KV, G):
+    B, _, WG, hd = x.shape
+    W = WG // G
+    return jnp.reshape(
+        jnp.transpose(jnp.reshape(x, (B, KV, W, G, hd)), (0, 2, 1, 3, 4)),
+        (B, W, KV * G, hd))
+
+
+@pytest.mark.parametrize("KV,G", [(1, 1), (2, 2), (2, 4)])
+@pytest.mark.parametrize("offset", [8, 11, 16])
+@pytest.mark.parametrize("W", [1, 2, 4])
+@pytest.mark.parametrize("int8", [False, True], ids=["f32", "int8"])
+def test_verify_matches_ref_oracle(KV, G, offset, W, int8):
+    """The verify wrapper == the gather-then-attend oracle across GQA
+    ratios, block-aligned and mid-block offsets, every supported draft
+    width, and both pool dtypes."""
+    B, hd, NP, BS, NBT = 2, 16, 12, 8, 4
+    q, kp, vp, ksc, vsc, kn, vn, tables = _verify_problem(
+        7, B, KV, G, hd, NP, BS, NBT, W, int8=int8)
+    off = jnp.full((B,), offset, jnp.int32)
+    length = off + W
+    kvi = tuple(np.repeat(np.arange(KV), G))
+    qr = _to_ref_layout(q, KV, G)
+    if int8:
+        got = ops.paged_gqa_verify_int8(q, kp, ksc, vp, vsc, kn, vn,
+                                        tables, off, length, kv_index=kvi)
+        want = paged_prefill_attention_int8_ref(qr, kp, ksc, vp, vsc,
+                                                kn, vn, tables, off,
+                                                length, group=G)
+    else:
+        got = ops.paged_gqa_verify(q, kp, vp, kn, vn, tables, off,
+                                   length, kv_index=kvi)
+        want = paged_prefill_attention_ref(qr, kp, vp, kn, vn, tables,
+                                           off, length, group=G)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_from_ref_layout(want, KV, G)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_verify_wrapper_is_prefill_body():
+    """The distinct verify name runs the SAME kernel body as chunk
+    prefill — bitwise, both dtypes (the registration split is about
+    runtime accounting, not math)."""
+    B, KV, G, hd, NP, BS, NBT, W = 2, 2, 2, 16, 12, 8, 4, 4
+    q, kp, vp, _, _, kn, vn, tables = _verify_problem(
+        3, B, KV, G, hd, NP, BS, NBT, W)
+    off = jnp.full((B,), 11, jnp.int32)
+    kvi = tuple(np.repeat(np.arange(KV), G))
+    a = ops.paged_gqa_verify(q, kp, vp, kn, vn, tables, off, off + W,
+                             kv_index=kvi)
+    b = ops.paged_gqa_prefill(q, kp, vp, kn, vn, tables, off, off + W,
+                              kv_index=kvi)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_verify_pool_junk_isolation():
+    """Pool content at masked positions — unreferenced blocks AND the
+    referenced blocks' columns at or past ``offset`` — must not change
+    the verify output: rejected-draft junk beyond the write frontier is
+    exactly such content."""
+    B, KV, G, hd, NP, BS, NBT, W = 2, 2, 2, 16, 12, 8, 4, 4
+    q, kp, vp, _, _, kn, vn, tables = _verify_problem(
+        5, B, KV, G, hd, NP, BS, NBT, W)
+    offset = 11                       # mid-block: block 1 is half junk
+    off = jnp.full((B,), offset, jnp.int32)
+    kvi = tuple(np.repeat(np.arange(KV), G))
+    base = np.asarray(ops.paged_gqa_verify(q, kp, vp, kn, vn, tables,
+                                           off, off + W, kv_index=kvi))
+    kp2, vp2 = np.array(kp), np.array(vp)
+    used = set()
+    for b in range(B):
+        for j in range(-(-offset // BS)):
+            used.add(int(tables[b, j]))
+    for p in range(NP):
+        if p not in used:
+            kp2[p] = 1e4              # junk an unreferenced block
+            vp2[p] = -1e4
+    for b in range(B):
+        blk = int(tables[b, offset // BS])
+        kp2[blk, offset % BS:] = 7e3  # junk past the frontier, in-block
+        vp2[blk, offset % BS:] = -7e3
+    got = np.asarray(ops.paged_gqa_verify(q, jnp.asarray(kp2),
+                                          jnp.asarray(vp2), kn, vn,
+                                          tables, off, off + W,
+                                          kv_index=kvi))
+    np.testing.assert_array_equal(got, base)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_verify_attention_backends_agree(backend, cfg):
+    """Both model-facing verify builds agree with the XLA reference —
+    the migration-safety precondition for the engine matrix below."""
+    B, KV, G, hd, NP, BS, NBT, W = 2, 2, 2, 16, 12, 8, 4, 4
+    q, kp, vp, _, _, kn, vn, tables = _verify_problem(
+        9, B, KV, G, hd, NP, BS, NBT, W)
+    off = jnp.full((B,), 9, jnp.int32)
+    kvi = np.repeat(np.arange(KV), G)
+    want = paged_verify_attention(q, kp, vp, tables, off, off + W, kn,
+                                  vn, kv_index=kvi, backend="xla")
+    got = paged_verify_attention(q, kp, vp, tables, off, off + W, kn,
+                                 vn, kv_index=kvi, backend=backend)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------ model step functions
+
+def _paged_state(cfg, model, params, S=21, bs=16, seed=0):
+    """Prefill a prompt into pool blocks; returns (cache, prompt, table,
+    first greedy token)."""
+    cache = model.init_paged_cache(25, bs)
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(1, cfg.vocab_size, size=S).astype(np.int32)
+    nb = -(-S // bs) + 1
+    table = np.zeros((1, 8), np.int32)
+    table[0, :nb] = np.arange(1, nb + 1)
+    Sb = 32
+    toks = np.zeros((1, Sb), np.int32)
+    toks[0, :S] = prompt
+    batch = {"tokens": jnp.asarray(toks),
+             "offset": jnp.zeros((1,), jnp.int32),
+             "length": jnp.full((1,), S, jnp.int32),
+             "block_table": jnp.asarray(table),
+             **sampling_leaves(SamplingParams(), 1)}
+    tok0, _, pc = model.prefill_ctx_sampled(params, cache, batch,
+                                            backend="xla")
+    intra = np.arange(Sb)
+    valid = intra < S
+    blk = np.where(valid, table[0][np.clip(intra // bs, 0, 7)], 0)
+    off = np.where(valid, intra % bs, 0)
+    for k in pc:
+        c = np.array(np.asarray(cache[k]))
+        c[:, blk, off] = np.asarray(pc[k][:, 0]).astype(c.dtype)
+        cache[k] = jnp.asarray(c)
+    return cache, prompt, table, int(np.asarray(tok0)[0])
+
+
+def test_decode_verify_matches_sequential_decode(cfg):
+    """Feed verify the TRUE next tokens as 'drafts': its per-position
+    samples must reproduce k sequential greedy decode steps, and its
+    masked scatter must leave the pool able to continue decoding."""
+    model = build_model(cfg, None)
+    params = model.init(jax.random.PRNGKey(0))
+    cache, prompt, table, t0 = _paged_state(cfg, model, params)
+    S, k = len(prompt), 4
+    # sequential oracle: 4 decode steps
+    seq_cache = {n: v for n, v in cache.items()}
+    toks, cur = [], t0
+    for i in range(k):
+        b = {"tokens": jnp.full((1, 1), cur, jnp.int32),
+             "index": jnp.full((1,), S + i, jnp.int32),
+             "block_table": jnp.asarray(table),
+             **sampling_leaves(SamplingParams(), 1)}
+        t, _, seq_cache = model.decode_sampled(params, seq_cache, b,
+                                               backend="xla")
+        cur = int(np.asarray(t)[0])
+        toks.append(cur)
+    # one verify: tokens [t0, toks[0], toks[1], toks[2]] at offset S
+    vt = np.asarray([[t0] + toks[:k - 1]], np.int32)
+    vb = {"tokens": jnp.asarray(vt),
+          "offset": jnp.full((1,), S, jnp.int32),
+          "length": jnp.full((1,), S + k, jnp.int32),
+          "n_valid": jnp.full((1,), k, jnp.int32),
+          "block_table": jnp.asarray(table),
+          **sampling_leaves(SamplingParams(), 1)}
+    vtoks, _, vcache = model.decode_verify(params, cache, vb,
+                                           backend="xla")
+    np.testing.assert_array_equal(np.asarray(vtoks)[0], toks)
+    # the scatter wrote the fed tokens' KV: decoding ON from the verify
+    # cache must agree with decoding on from the sequential cache
+    nxt = {"tokens": jnp.full((1, 1), toks[-1], jnp.int32),
+           "index": jnp.full((1,), S + k, jnp.int32),
+           "block_table": jnp.asarray(table),
+           **sampling_leaves(SamplingParams(), 1)}
+    a, _, _ = model.decode_sampled(params, vcache, nxt, backend="xla")
+    b, _, _ = model.decode_sampled(params, seq_cache, nxt, backend="xla")
+    assert int(np.asarray(a)[0]) == int(np.asarray(b)[0])
+
+
+def test_decode_draft_chain_matches_manual_chain(cfg):
+    """The fused fori_loop chain == n_steps manual decode+sample calls,
+    including the traced (non-recompiling) n_steps bound."""
+    dcfg = spec_lib.draft_model_config(cfg)
+    model = build_model(dcfg, None)
+    target = build_model(cfg, None)
+    params = spec_lib.share_draft_params(
+        target.init(jax.random.PRNGKey(0)), dcfg.num_layers)
+    B, S, k = 2, 9, 4
+    cache = model.init_cache(B, 32)
+    rng = np.random.default_rng(3)
+    t0 = rng.integers(1, cfg.vocab_size, size=(B, 1)).astype(np.int32)
+    # manual chain
+    mcache = {n: v for n, v in cache.items()}
+    cur, manual = jnp.asarray(t0), []
+    from repro.models import sampling as sampling_lib
+    sl = sampling_leaves(SamplingParams(), B)
+    for i in range(k):
+        logits, mcache = model.decode(params, mcache,
+                                      {"tokens": cur,
+                                       "index": jnp.full((B,), S + i,
+                                                         jnp.int32)},
+                                      backend="xla")
+        t, _ = sampling_lib.sample_tokens(
+            logits[:, -1, :], sl["temperature"], sl["top_k"], sl["top_p"],
+            sl["seed"], jnp.full((B,), S + i + 1, jnp.int32))
+        manual.append(np.asarray(t))
+        cur = t[:, None].astype(jnp.int32)
+    fused = jax.jit(lambda p, c, b: model.decode_draft(p, c, b,
+                                                       backend="xla",
+                                                       max_steps=k))
+    for n in (k, 2):                  # full chain AND a shrunk k
+        drafts, _, _ = fused(params, {m: v for m, v in cache.items()},
+                             {"tokens": jnp.asarray(t0),
+                              "index": jnp.full((B,), S, jnp.int32),
+                              "n_steps": jnp.int32(n), **sl})
+        drafts = np.asarray(drafts)
+        for i in range(n):
+            np.testing.assert_array_equal(drafts[:, i], manual[i])
+        assert np.all(drafts[:, n:] == 0)      # untouched past n_steps
+
+
+# --------------------------------------------------------- spec helpers
+
+def test_acceptance_lengths_rule():
+    drafts = np.array([[5, 6, 7],      # all match -> emit 4
+                       [5, 0, 7],      # first mismatch at col 1 -> 2
+                       [9, 6, 7],      # mismatch at col 0 -> 1
+                       [5, 6, 7],      # n_valid=2: only col 0 counts
+                       [1, 2, 3]])     # inactive row
+    verify = np.array([[5, 6, 7, 8],
+                       [5, 6, 7, 8],
+                       [5, 6, 7, 8],
+                       [5, 6, 7, 8],
+                       [5, 6, 7, 8]])
+    n_valid = np.array([4, 4, 4, 2, 0])
+    assert spec_lib.acceptance_lengths(drafts, verify, n_valid) == \
+        [4, 2, 1, 2, 0]
+
+
+def test_zero_top_layers_exact_identity(cfg):
+    """A zeroed layer is an exact residual identity: the zeroed-target
+    logits equal the layer-truncated draft's BITWISE — the bench's
+    near-1-acceptance configuration is exact, not approximate."""
+    target = build_model(cfg, None)
+    params = target.init(jax.random.PRNGKey(0))
+    keep = 1
+    zp = spec_lib.zero_top_layers(params, keep)
+    dcfg = spec_lib.draft_model_config(cfg, num_layers=keep)
+    draft = build_model(dcfg, None)
+    dp = spec_lib.share_draft_params(zp, keep)
+    toks = jnp.asarray(np.arange(1, 9, dtype=np.int32)[None])
+    lt, _ = target.prefill(zp, {"tokens": toks})
+    ld, _ = draft.prefill(dp, {"tokens": toks})
+    np.testing.assert_array_equal(np.asarray(lt), np.asarray(ld))
+
+
+def test_draft_model_config_validates(cfg):
+    d = spec_lib.draft_model_config(cfg)
+    assert d.num_layers == max(1, cfg.num_layers // 2)
+    assert d.kv_cache_dtype == cfg.dtype      # dense scratch is lossless
+    with pytest.raises(ValueError):
+        spec_lib.draft_model_config(cfg, num_layers=cfg.num_layers + 1)
+    with pytest.raises(ValueError):
+        spec_lib.draft_model_config(cfg, num_layers=0)
+
+
+def test_latency_policy_draft_len_hook():
+    pol = LatencyAwarePolicy(queue_depth_hi=8)
+    idle = LoadSignals(queue_depth=0, active_slots=2, free_kv_frac=0.9)
+    mid = LoadSignals(queue_depth=4, active_slots=2, free_kv_frac=0.9)
+    hot = LoadSignals(queue_depth=9, active_slots=2, free_kv_frac=0.9)
+    assert pol.draft_len(idle, 4) == 4
+    assert pol.draft_len(mid, 4) == 2         # half under queue build-up
+    assert pol.draft_len(hot, 4) == 0         # pressured: spec off
+
+
+# ------------------------------------------------------- engine matrix
+
+def test_spec_engine_requires_paged(cfg):
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatchingEngine(cfg, spec_decode=True, max_slots=2,
+                                 max_seq=64)
+
+
+def test_spec_byte_identity_host(cfg, served):
+    params, prompts, base = served
+    eng = ContinuousBatchingEngine(cfg, params=params, spec_decode=True,
+                                   spec_draft_len=4, **ENGINE_KW)
+    reqs = _reqs(prompts)
+    _assert_identical(eng.run(reqs), reqs, base)
+    st = eng.spec_stats()
+    assert st["spec_rounds"] > 0
+    # spec rounds emit most tokens; the rest ride the plain-decode
+    # fallback (pool-short fan-out shrink)
+    total = sum(len(b) for b in base)
+    assert 0 < st["spec_emitted_tokens"] <= total
+    assert 0.0 <= st["spec_acceptance_rate"] <= 1.0
+
+
+def test_spec_byte_identity_accel(cfg, served):
+    params, prompts, base = served
+    eng = ContinuousBatchingEngine(cfg, params=params, spec_decode=True,
+                                   spec_draft_len=4, policy=PinAccel(),
+                                   **ENGINE_KW)
+    reqs = _reqs(prompts)
+    _assert_identical(eng.run(reqs), reqs, base)
+    assert eng.spec_stats()["spec_rounds"] > 0
+
+
+class _SplitPolicy:
+    """Draft on HOST, verify on ACCEL, everything else HOST — the
+    headline heterogeneous split, scripted."""
+    name = "split_draft_verify"
+
+    def decide(self, signals, row, residency):
+        if row.app.endswith("_verify") and residency.resident:
+            return Decision(TargetKind.ACCEL)
+        return Decision(TargetKind.HOST)
+
+
+def test_spec_draft_host_verify_accel(cfg, served):
+    """Byte-identity with the draft chain and verify dispatched to
+    DIFFERENT targets, and the runtime's per-function accounting sees
+    both as distinct binaries."""
+    params, prompts, base = served
+    rt = XarTrekRuntime(registry=FunctionRegistry(), policy="always_host")
+    eng = ContinuousBatchingEngine(cfg, params=params, spec_decode=True,
+                                   spec_draft_len=4, runtime=rt,
+                                   fn_prefix="sp", **ENGINE_KW)
+    rt.server.policy = _SplitPolicy()
+    reqs = _reqs(prompts)
+    _assert_identical(eng.run(reqs), reqs, base)
+    pf = rt.summary()["per_function"]
+    assert pf["sp_draft"]["calls"].get("host", 0) > 0
+    assert pf["sp_draft"]["calls"].get("accel", 0) == 0
+    assert pf["sp_verify"]["calls"].get("accel", 0) > 0
+    assert pf["sp_verify"]["calls"].get("host", 0) == 0
+    # one spec round = one draft dispatch + one verify dispatch
+    assert (pf["sp_draft"]["calls"]["host"]
+            == pf["sp_verify"]["calls"]["accel"]
+            == eng.stats["spec_rounds"])
+
+
+class _FlipVerify:
+    """Verify HOST -> ACCEL -> HOST mid-stream; draft stays HOST."""
+    name = "flip_verify"
+
+    def __init__(self, at=(3, 8)):
+        self.at, self.n = at, 0
+
+    def decide(self, signals, row, residency):
+        if row.app.endswith("_verify"):
+            self.n += 1
+            if self.at[0] < self.n <= self.at[1] and residency.resident:
+                return Decision(TargetKind.ACCEL)
+        return Decision(TargetKind.HOST)
+
+
+def test_spec_forced_midstream_migration(cfg, served):
+    params, prompts, base = served
+    rt = XarTrekRuntime(registry=FunctionRegistry(), policy="always_host")
+    eng = ContinuousBatchingEngine(cfg, params=params, spec_decode=True,
+                                   spec_draft_len=4, runtime=rt,
+                                   fn_prefix="fv", **ENGINE_KW)
+    rt.server.policy = _FlipVerify()
+    reqs = _reqs(prompts)
+    _assert_identical(eng.run(reqs), reqs, base)
+    vf = rt.summary()["per_function"]["fv_verify"]
+    assert vf["calls"].get("accel", 0) == 5
+    assert vf["migrations"] >= 2      # HOST->ACCEL and ACCEL->HOST
+
+
+def test_spec_preempt_resume_starved_pool(cfg, served):
+    """A pool too small for all slots forces preempt/resume mid-stream
+    and exercises the fan-out-shrink + plain-decode fallback; output is
+    still byte-identical."""
+    params, prompts, base = served
+    kw = dict(ENGINE_KW, num_blocks=9)
+    eng = ContinuousBatchingEngine(cfg, params=params, spec_decode=True,
+                                   spec_draft_len=4, **kw)
+    reqs = _reqs(prompts)
+    _assert_identical(eng.run(reqs), reqs, base)
+    assert eng.spec_stats()["spec_rounds"] > 0
+
+
+def test_spec_with_prefix_cache(cfg, served):
+    """Spec rounds write RANGES of blocks — the COW defense and the
+    accepted-only block registration must keep two cache-sharing waves
+    byte-identical to the uncached baseline."""
+    params, prompts, base = served
+    eng = ContinuousBatchingEngine(cfg, params=params, spec_decode=True,
+                                   spec_draft_len=4, prefix_cache=True,
+                                   **ENGINE_KW)
+    for wave in range(2):             # second wave hits the prefix cache
+        reqs = _reqs(prompts)
+        _assert_identical(eng.run(reqs), reqs, base)
+    assert eng.prefix_stats()["prefix_hit_tokens"] > 0
+
+
+def test_spec_int8_pool_greedy_identity(cfg, served):
+    """int8 target pool: verify routes through the dequantising kernel
+    wrapper; spec-on must match spec-off on the SAME lossy pool."""
+    params, prompts, _ = served
+    c8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    r0 = _reqs(prompts)
+    out0 = ContinuousBatchingEngine(c8, params=params,
+                                    **ENGINE_KW).run(r0)
+    eng = ContinuousBatchingEngine(c8, params=params, spec_decode=True,
+                                   spec_draft_len=4, **ENGINE_KW)
+    r1 = _reqs(prompts)
+    _assert_identical(eng.run(r1), r1,
+                      [out0[r.req_id].tokens for r in r0])
+    assert eng.spec is not None
+    assert eng.spec.cfg.kv_cache_dtype == "float32"   # draft scratch
+
+
+def test_spec_sampled_deterministic(cfg, served):
+    """Seeded sampling: spec-on output is bitwise reproducible across
+    fresh engines for a fixed spec configuration (every comparand
+    commits verify's draws under the same positional keys)."""
+    params, prompts, _ = served
+    sp = SamplingParams(temperature=0.8, top_k=40, seed=7)
+    outs = []
+    for _ in range(2):
+        eng = ContinuousBatchingEngine(cfg, params=params,
+                                       spec_decode=True,
+                                       spec_draft_len=4, **ENGINE_KW)
+        reqs = _reqs(prompts, sampling=sp)
+        out = eng.run(reqs)
+        outs.append([out[r.req_id].tokens for r in reqs])
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_spec_zeroed_target_full_acceptance(cfg, served):
+    """zero_top_layers makes draft == target exactly, so acceptance hits
+    1.0 and every round emits its full width — the mechanism behind the
+    benchmark's speedup floor."""
+    params, prompts, _ = served
+    zp = spec_lib.zero_top_layers(params, 1)
+    r0 = _reqs(prompts)
+    out0 = ContinuousBatchingEngine(cfg, params=zp, **ENGINE_KW).run(r0)
+    eng = ContinuousBatchingEngine(cfg, params=zp, spec_decode=True,
+                                   spec_draft_len=4, spec_draft_layers=1,
+                                   **ENGINE_KW)
+    r1 = _reqs(prompts)
+    _assert_identical(eng.run(r1), r1,
+                      [out0[r.req_id].tokens for r in r0])
+    st = eng.spec_stats()
+    assert st["spec_acceptance_rate"] == 1.0
+    # k tokens per 2 dispatches: far fewer rounds than tokens
+    assert st["spec_rounds"] * 2 < st["spec_emitted_tokens"]
+
+
+class _FixedDraftLen:
+    """Policy scripting the draft_len hook through the runtime."""
+    name = "fixed_k"
+
+    def __init__(self, k):
+        self.k = k
+
+    def decide(self, signals, row, residency):
+        return Decision(TargetKind.HOST)
+
+    def draft_len(self, signals, default=4):
+        return self.k
+
+
+def test_spec_policy_draft_len_zero_disables(cfg, served):
+    params, prompts, base = served
+    rt = XarTrekRuntime(registry=FunctionRegistry(), policy="always_host")
+    eng = ContinuousBatchingEngine(cfg, params=params, spec_decode=True,
+                                   spec_draft_len=4, runtime=rt,
+                                   fn_prefix="k0", **ENGINE_KW)
+    rt.server.policy = _FixedDraftLen(0)
+    reqs = _reqs(prompts)
+    _assert_identical(eng.run(reqs), reqs, base)
+    assert eng.stats["spec_rounds"] == 0      # every step fell back
+    assert eng.stats["decode_steps"] > 0
+
+
+def test_spec_policy_draft_len_shrinks_width(cfg, served):
+    """k=2 from the policy, verify width compiled at 4: the shrink is
+    per-row data (n_valid), so at most 1 drafted token per row rides
+    each round."""
+    params, prompts, _ = served
+    rt = XarTrekRuntime(registry=FunctionRegistry(), policy="always_host")
+    eng = ContinuousBatchingEngine(cfg, params=params, spec_decode=True,
+                                   spec_draft_len=4, runtime=rt,
+                                   fn_prefix="k2", **ENGINE_KW)
+    rt.server.policy = _FixedDraftLen(2)
+    reqs = _reqs(prompts)
+    eng.run(reqs)
+    st = eng.spec_stats()
+    assert st["spec_rounds"] > 0
+    # <= 1 proposed draft per row per round under k=2
+    assert st["spec_proposed_tokens"] <= st["spec_rounds"] * len(prompts)
+
+
+# -------------------------------------- satellite: stall-feedback loop
+
+def test_prefill_budget_contracts_on_stall():
+    pol = LatencyAwarePolicy(prefill_tokens_per_step=64,
+                             stall_target_ms=50.0)
+    calm = LoadSignals(queue_depth=0, active_slots=2, free_kv_frac=0.9,
+                       decode_stall_ms=10.0)
+    hot = LoadSignals(queue_depth=0, active_slots=2, free_kv_frac=0.9,
+                      decode_stall_ms=200.0)
+    assert pol.prefill_budget(calm, None) == 64
+    assert pol.prefill_budget(hot, None) == 16       # 64 * 50/200
+    worse = dataclasses.replace(hot, decode_stall_ms=100000.0)
+    assert pol.prefill_budget(worse, None) == 1      # floored, never 0
+
+
+def test_engine_stall_ewma_feeds_budget(cfg, served):
+    """Regression for the feedback loop end to end: the engine's stall
+    EWMA reaches the policy through LoadSignals.decode_stall_ms, the
+    budget contracts while stalled, and idle steps decay the signal so
+    the budget recovers."""
+    params, _, _ = served
+    rt = XarTrekRuntime(registry=FunctionRegistry(),
+                        policy=LatencyAwarePolicy(
+                            prefill_tokens_per_step=64,
+                            stall_target_ms=50.0))
+    eng = ContinuousBatchingEngine(cfg, params=params, runtime=rt,
+                                   fn_prefix="st", **ENGINE_KW)
+    assert eng.signals().decode_stall_ms is None     # no stall yet
+    real = eng.signals       # budget only applies with decodes in flight
+    eng.signals = lambda: dataclasses.replace(real(), active_slots=2)
+    eng._stall_ewma = 200.0                          # induced stall
+    assert eng.signals().decode_stall_ms == 200.0
+    assert eng._prefill_budget() == 16               # contracted
+    for _ in range(60):      # idle iterations: no pending chunk work
+        eng._advance_prefills(None)
+    assert eng.signals().decode_stall_ms < 50.0      # decayed
+    assert eng._prefill_budget() == 64               # recovered
+
+
+# ------------------------------------ satellite: span-rehydrate scatter
+
+def test_scatter_span_one_compile_and_identical(cfg, served):
+    """Span rehydration compiles ONCE for every span size (the old
+    per-block-count _scatter specialized per size) and the rehydrated
+    engine's tokens stay byte-identical to local serving."""
+    params, prompts, base = served
+    pre = ContinuousBatchingEngine(cfg, params=params, **ENGINE_KW)
+    dec = ContinuousBatchingEngine(cfg, params=params, **ENGINE_KW)
+    # prompts span 1 and 2 block spans (block_size 16, len 4..19)
+    reqs = _reqs(prompts)
+    for r in reqs:
+        dec.submit_span(r, pre.prefill_to_span(r))
+    out = dec.run()
+    _assert_identical(out, reqs, base)
+    assert dec.stats["spans_admitted"] == len(reqs)
+    sizes = {len(np.asarray(p)) // dec.block_size for p in prompts}
+    assert len(sizes) > 1             # the sweep really varied span size
+    assert dec._scatter_span._cache_size() == 1
