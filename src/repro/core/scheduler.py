@@ -18,11 +18,18 @@ real co-tenant load").
 
 Two transports: in-process (default — one JAX process drives the fleet)
 and a line-JSON TCP transport mirroring the paper's socket setup (used
-by the cluster front-end, the multi-process example and tests); the TCP
-protocol carries ``request`` / ``report`` / ``publish`` / ``handoff``
-ops — ``handoff`` moves a disaggregated prefill's KV span (opaque
-base64 payload) to a registered decode-role sink, so phase handoffs
-ride the same control plane as scheduling decisions.
+by the cluster front-ends, the multi-process example and tests); the
+TCP protocol carries ``request`` / ``report`` / ``publish`` /
+``handoff`` / ``heartbeat`` / ``kernel`` ops — ``handoff`` moves a
+disaggregated prefill's KV span (opaque base64 payload) to a
+registered decode-role sink, so phase handoffs ride the same control
+plane as scheduling decisions; ``heartbeat`` is the process-cluster
+liveness beat (the supervisor reads ``SchedulerServer.heartbeats`` to
+detect dead/straggling workers); ``kernel`` reports a REMOTE worker's
+kernel-bank residency, because an OS-process worker's bank lives in
+its own address space where the central ``residency()`` lookup cannot
+reach — without the report the policy would see every process
+worker's ACCEL build as permanently absent.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ import json
 import socket
 import socketserver
 import threading
+import time
 from typing import Callable, Optional
 
 from repro.core.kernel_bank import KernelBank
@@ -65,6 +73,12 @@ class SchedulerServer:
         # handoff (disaggregation: prefill worker -> decode worker)
         self._handoff_sinks: dict[str, Callable[[int, bytes], None]] = {}
         self.handoffs = 0
+        # worker_id -> last liveness beat (process-cluster supervision):
+        # {"seq": int, "t": monotonic receipt time, "info": dict}
+        self.heartbeats: dict[str, dict] = {}
+        # kernel -> Residency reported by an out-of-process worker whose
+        # bank this server cannot query directly
+        self._remote_residency: dict[str, Residency] = {}
 
     # ------------------------------------------------------------- policy
     @property
@@ -132,10 +146,33 @@ class SchedulerServer:
         with self._lock:
             self._owners[kernel] = bank
 
+    def register_remote_kernel(self, app: str, kernel: str,
+                               resident: bool, loading: bool) -> None:
+        """Residency report from an OS-process worker: its bank lives in
+        another address space, so it pushes state here instead of being
+        queried.  Also pins the app's threshold row to the kernel name —
+        the central row may have been lazily created by a ``request``
+        before this report, with the default placeholder kernel."""
+        with self._lock:
+            self.table.row(app).hw_kernel = kernel
+            self._remote_residency[kernel] = Residency(
+                resident=resident, loading=loading)
+
+    def heartbeat(self, worker: str, seq: int,
+                  info: Optional[dict] = None) -> None:
+        """Record one liveness beat.  Receipt time is the SERVER's
+        monotonic clock, so the supervisor's deadline math never
+        depends on cross-process clock agreement."""
+        with self._lock:
+            self.heartbeats[worker] = {"seq": int(seq),
+                                       "t": time.monotonic(),
+                                       "info": dict(info or {})}
+
     def residency(self, kernel: str) -> Residency:
         bank = self._owners.get(kernel, self.bank)
         if bank is None:
-            return Residency()
+            with self._lock:
+                return self._remote_residency.get(kernel, Residency())
         return Residency(resident=bank.is_resident(kernel),
                          loading=bank.is_loading(kernel))
 
@@ -183,6 +220,14 @@ class SchedulerClient:
     def handoff(self, dest: str, req_id: int, payload: bytes) -> None:
         self.server.handoff(dest, req_id, payload)
 
+    def heartbeat(self, worker: str, seq: int,
+                  info: Optional[dict] = None) -> None:
+        self.server.heartbeat(worker, seq, info)
+
+    def register_remote_kernel(self, app: str, kernel: str,
+                               resident: bool, loading: bool) -> None:
+        self.server.register_remote_kernel(app, kernel, resident, loading)
+
 
 # --------------------------------------------------------------- TCP mode
 
@@ -208,6 +253,15 @@ class _Handler(socketserver.StreamRequestHandler):
                         msg["dest"], int(msg["req_id"]),
                         base64.b64decode(msg["payload"]))
                     resp = {"ok": True}
+                elif msg["op"] == "heartbeat":
+                    self.server.xar.heartbeat(
+                        msg["worker"], int(msg["seq"]), msg.get("info"))
+                    resp = {"ok": True}
+                elif msg["op"] == "kernel":
+                    self.server.xar.register_remote_kernel(
+                        msg["app"], msg["kernel"],
+                        bool(msg["resident"]), bool(msg["loading"]))
+                    resp = {"ok": True}
                 else:
                     resp = {"error": f"unknown op {msg['op']}"}
             except Exception as e:  # noqa: BLE001 — report to client
@@ -217,7 +271,15 @@ class _Handler(socketserver.StreamRequestHandler):
 
 
 class TcpSchedulerServer:
-    """Paper-faithful socket transport around a SchedulerServer."""
+    """Paper-faithful socket transport around a SchedulerServer.
+
+    Binding to port 0 (the default) takes a kernel-assigned ephemeral
+    port with no reserve-then-rebind race; ``address`` carries the
+    resolved port.  ``stop()`` is idempotent and joins the serve
+    thread, so error-path teardown (``finally`` blocks, context
+    managers, a front-end whose construction failed halfway) can call
+    it unconditionally without tripping on a double ``server_close``
+    or leaking the listener socket."""
 
     def __init__(self, inner: SchedulerServer, host: str = "127.0.0.1",
                  port: int = 0):
@@ -228,14 +290,30 @@ class TcpSchedulerServer:
         self.address = self._srv.server_address
         self._thread = threading.Thread(target=self._srv.serve_forever,
                                         daemon=True)
+        self._started = False
+        self._stopped = False
 
     def start(self) -> tuple[str, int]:
         self._thread.start()
+        self._started = True
         return self.address
 
     def stop(self) -> None:
-        self._srv.shutdown()
-        self._srv.server_close()
+        if self._stopped:
+            return
+        self._stopped = True
+        if self._started:
+            self._srv.shutdown()          # stops serve_forever
+            self._thread.join(timeout=5.0)
+        self._srv.server_close()          # closes the listener socket
+
+    def __enter__(self) -> "TcpSchedulerServer":
+        if not self._started:
+            self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
 
 
 class TcpSchedulerClient:
@@ -249,7 +327,18 @@ class TcpSchedulerClient:
         with self._lock:
             self._file.write(json.dumps(msg) + "\n")
             self._file.flush()
-            return json.loads(self._file.readline())
+            line = self._file.readline()
+        if not line:
+            raise ConnectionError(
+                f"scheduler connection closed mid-rpc (op "
+                f"{msg.get('op')!r}, app {self.app!r})")
+        resp = json.loads(line)
+        if "error" in resp:
+            # surface server-side failures as exceptions instead of a
+            # KeyError on the missing happy-path field three frames up
+            raise RuntimeError(f"scheduler {msg.get('op')!r} failed: "
+                               f"{resp['error']}")
+        return resp
 
     def before_call(self) -> Decision:
         resp = self._rpc({"op": "request", "app": self.app})
@@ -268,10 +357,25 @@ class TcpSchedulerClient:
                    "signals": dataclasses.asdict(signals)})
 
     def handoff(self, dest: str, req_id: int, payload: bytes) -> None:
-        resp = self._rpc({"op": "handoff", "dest": dest, "req_id": req_id,
-                          "payload": base64.b64encode(payload).decode()})
-        if "error" in resp:
-            raise RuntimeError(f"handoff failed: {resp['error']}")
+        self._rpc({"op": "handoff", "dest": dest, "req_id": req_id,
+                   "payload": base64.b64encode(payload).decode()})
+
+    def heartbeat(self, worker: str, seq: int,
+                  info: Optional[dict] = None) -> None:
+        self._rpc({"op": "heartbeat", "worker": worker, "seq": seq,
+                   "info": info})
+
+    def register_remote_kernel(self, app: str, kernel: str,
+                               resident: bool, loading: bool) -> None:
+        self._rpc({"op": "kernel", "app": app, "kernel": kernel,
+                   "resident": resident, "loading": loading})
 
     def close(self) -> None:
-        self._sock.close()
+        """Idempotent: both the buffered file wrapper and the socket
+        close, and a second close (or one racing a failed construction)
+        is a no-op instead of an exception."""
+        for obj in (self._file, self._sock):
+            try:
+                obj.close()
+            except OSError:
+                pass

@@ -5,7 +5,9 @@ serves ragged arrival streams with dense or paged (block-table) KV,
 optional content-addressed prefix caching and int8 quantised pools,
 dispatching every step through the Xar-Trek runtime so scheduling
 policies migrate prefill/decode between HOST and ACCEL builds.
-`ClusterFrontEnd` runs N engine workers behind one central scheduler.
+`ClusterFrontEnd` runs N engine workers behind one central scheduler;
+`ProcClusterFrontEnd` promotes the workers to OS processes with a
+streaming IPC result plane and a fault-tolerant supervisor.
 See README.md in this package for the full design.
 """
 from repro.serve.api import (
@@ -15,5 +17,8 @@ from repro.serve.batch import BlockPool, PagedSlotManager, Slot, SlotManager
 from repro.serve.cluster import ClusterFrontEnd, EngineWorker
 from repro.serve.engine import (
     ContinuousBatchingEngine, GenerationResult, ServeEngine, prompt_bucket,
+)
+from repro.serve.proc import (
+    ClusterSupervisor, ProcClusterFrontEnd, ProcessEngineWorker,
 )
 from repro.serve.scheduler import Request, RequestQueue, poisson_arrivals

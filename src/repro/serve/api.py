@@ -35,6 +35,7 @@ import dataclasses
 import itertools
 import queue as queue_lib
 import threading
+import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -190,6 +191,16 @@ class RequestHandle:
     Tokens survive preemption: a preempted-and-resumed request replays
     its stashed tokens into the slot, and the handle's already-pushed
     count ensures nothing is re-emitted.
+
+    A handle can also be REMOTE: the engine serving the request lives in
+    another OS process and streams line-JSON events over the process
+    cluster's result plane.  ``apply_event`` rehydrates the handle from
+    those events — per-token events carry an absolute index so replays
+    (a dead worker's requests resumed on a survivor re-emit their
+    stashed prefix) dedup instead of double-pushing, and the finish
+    event closes the stream.  ``_engine`` then only needs an
+    ``abort(req_id)`` method, which the front-end proxies to the
+    owning worker.
     """
 
     def __init__(self, request: GenerationRequest, engine=None,
@@ -207,6 +218,11 @@ class RequestHandle:
         self.t_admit: Optional[float] = None
         self.t_first_token: Optional[float] = None
         self.t_last_token: Optional[float] = None
+        # wall-clock submit time (monotonic): remote handles compute
+        # TTFT/TPOT parent-side from event receipt times against this,
+        # so the reported numbers include IPC, routing and any
+        # failure-re-route delay — the honest end-to-end latency
+        self.t_created: float = time.monotonic()
 
     # ------------------------------------------------------ engine side
     def _push(self, token: int, now: float,
@@ -241,6 +257,57 @@ class RequestHandle:
         self._done.set()
         self._stream.put(_SENTINEL)
         return self._output
+
+    # ------------------------------------------------- remote (IPC) side
+    def apply_event(self, ev: dict) -> None:
+        """Rehydrate from one result-plane event (process cluster).
+
+        ``token`` events: ``{"ev": "token", "i": abs_index, "t": token,
+        "lp": logprob}`` — an index below the already-pushed count is a
+        replay (resume-by-re-prefill after a worker failure re-emits
+        the stashed prefix) and is dropped, which is exactly what makes
+        re-routed streams byte-identical instead of duplicated.
+
+        ``finish`` events carry the authoritative token/logprob lists
+        (any tokens that beat the per-token events to the wire are
+        pushed first), the finish reason and the WORKER-side queue
+        wait; TTFT/TPOT are computed here from parent-side receipt
+        times against ``t_created``."""
+        if self._done.is_set():
+            return                       # late event after abort/finish
+        kind = ev.get("ev")
+        now = time.monotonic()
+        if kind == "token":
+            if int(ev["i"]) < len(self.tokens):
+                return                   # replayed prefix: already seen
+            self._push(int(ev["t"]), now, float(ev.get("lp", 0.0)))
+        elif kind == "finish":
+            toks = [int(t) for t in ev.get("tokens", ())]
+            lps = [float(x) for x in ev.get("logprobs", ())]
+            if len(lps) != len(toks):
+                lps = [0.0] * len(toks)
+            for i in range(len(self.tokens), len(toks)):
+                self._push(toks[i], now, lps[i])
+            n = len(self.tokens)
+            t_first = self.t_first_token
+            t_last = (self.t_last_token
+                      if self.t_last_token is not None else now)
+            self._output = RequestOutput(
+                req_id=self.req_id,
+                tokens=np.asarray(self.tokens, np.int32),
+                logprobs=(np.asarray(self.logprobs, np.float32)
+                          if self.request.sampling.logprobs else None),
+                finish_reason=ev["finish_reason"],
+                queue_wait_s=float(ev.get("queue_wait_s", 0.0)),
+                ttft_s=max((t_first if t_first is not None else now)
+                           - self.t_created, 0.0),
+                tpot_s=((t_last - t_first) / (n - 1)
+                        if n > 1 and t_first is not None else 0.0),
+            )
+            self._done.set()
+            self._stream.put(_SENTINEL)
+        else:
+            raise ValueError(f"unknown result-plane event {kind!r}")
 
     # ------------------------------------------------------ caller side
     @property

@@ -110,9 +110,12 @@ class EngineWorker:
         self._thread.start()
 
     def stop(self, timeout: float = 10.0) -> None:
+        """Idempotent, and safe on a worker whose thread never started
+        (a front-end torn down from a constructor failure path)."""
         self._stop.set()
         self._wake.set()
-        self._thread.join(timeout)
+        if self._thread.ident is not None:
+            self._thread.join(timeout)
         for client in self.runtime._clients.values():
             close = getattr(client, "close", None)
             if close is not None:
@@ -227,41 +230,52 @@ class ClusterFrontEnd:
                                       monitor=LoadMonitor(platform),
                                       policy=policy)
         self._tcp: Optional[TcpSchedulerServer] = None
-        address = None
-        if transport == "tcp":
-            self._tcp = TcpSchedulerServer(self.server)
-            address = self._tcp.start()
-        self.workers: list[EngineWorker] = []
-        for i in range(n_engines):
-            w = EngineWorker(f"{worker_prefix}{i}", cfg, self.server,
-                             scheduler_address=address, role=roles[i],
-                             params=params, seed=seed, **engine_kwargs)
-            if params is None:
-                params = w.engine.params          # share across workers
-            self.workers.append(w)
-        # disaggregation plumbing: decode-capable workers register a
-        # span sink under their worker_id; prefill workers hand spans
-        # to the control plane addressed at the request's decode owner
-        self._pending_spans: dict[int, tuple[GenerationRequest,
-                                             EngineWorker]] = {}
-        # prompts at or under this length prefill in place on their
-        # decode owner: the span tier exists for prompts whose prefill
-        # would stall co-resident decodes, and a one-chunk prompt costs
-        # less to compute locally than to serialize and hand off
-        self._span_threshold = int(
-            engine_kwargs.get("prefill_tokens_per_step")
-            or engine_kwargs.get("block_size") or 16)
         self._handoff_client = None
-        if any(r == "prefill" for r in roles):
-            for w in self.workers:
-                if w.role != "prefill":
-                    self.server.register_handoff_sink(
-                        w.worker_id, self._make_sink(w))
-                else:
-                    w.on_handoff = self._handoff_out
-            if address is not None:
-                self._handoff_client = TcpSchedulerClient("handoff",
-                                                          address)
+        self.workers: list[EngineWorker] = []
+        self._stopped = False
+        try:
+            address = None
+            if transport == "tcp":
+                self._tcp = TcpSchedulerServer(self.server)
+                address = self._tcp.start()
+            for i in range(n_engines):
+                w = EngineWorker(f"{worker_prefix}{i}", cfg, self.server,
+                                 scheduler_address=address, role=roles[i],
+                                 params=params, seed=seed, **engine_kwargs)
+                if params is None:
+                    params = w.engine.params      # share across workers
+                self.workers.append(w)
+            # disaggregation plumbing: decode-capable workers register a
+            # span sink under their worker_id; prefill workers hand
+            # spans to the control plane addressed at the request's
+            # decode owner
+            self._pending_spans: dict[int, tuple[GenerationRequest,
+                                                 EngineWorker]] = {}
+            # prompts at or under this length prefill in place on their
+            # decode owner: the span tier exists for prompts whose
+            # prefill would stall co-resident decodes, and a one-chunk
+            # prompt costs less to compute locally than to serialize
+            # and hand off
+            self._span_threshold = int(
+                engine_kwargs.get("prefill_tokens_per_step")
+                or engine_kwargs.get("block_size") or 16)
+            if any(r == "prefill" for r in roles):
+                for w in self.workers:
+                    if w.role != "prefill":
+                        self.server.register_handoff_sink(
+                            w.worker_id, self._make_sink(w))
+                    else:
+                        w.on_handoff = self._handoff_out
+                if address is not None:
+                    self._handoff_client = TcpSchedulerClient("handoff",
+                                                              address)
+        except BaseException:
+            # a worker that failed to build mid-list, or a handoff
+            # client that could not connect, must not leak the TCP
+            # server thread / listener socket or the workers' runtime
+            # clients into the caller's except path
+            self.stop()
+            raise
         self._owner: dict[int, EngineWorker] = {}
         self._handles: dict[int, RequestHandle] = {}
         # req_id -> worker_id of requests completed by the last drain()
@@ -280,6 +294,13 @@ class ClusterFrontEnd:
         return self
 
     def stop(self) -> None:
+        """Idempotent: workers, the handoff client and the TCP server
+        all tolerate repeated/unstarted teardown, so ``with`` blocks,
+        explicit ``stop()`` calls and constructor-failure cleanup can
+        overlap without double-close errors."""
+        if self._stopped:
+            return
+        self._stopped = True
         for w in self.workers:
             w.stop()
         if self._handoff_client is not None:

@@ -661,6 +661,10 @@ class ContinuousBatchingEngine:
         self._spans: dict[int, "KVSpan"] = {}
         self._step_budget: Optional[int] = None
         self._handles: dict[int, RequestHandle] = {}
+        # fired from _finalize with (handle, RequestOutput) the moment a
+        # request finishes (any reason, including aborts) — the process
+        # worker's result-plane emitter; None = no observer
+        self.on_finish = None
         self._abort_pending: set[int] = set()
         self._abort_lock = threading.Lock()
         self._clock0: Optional[float] = None
@@ -965,6 +969,26 @@ class ContinuousBatchingEngine:
                 arrival_s=arrival_s, stop_tokens=stop_tokens,
                 sampling=sampling or SamplingParams())
         self.queue.submit(self.slots.validate(request))
+        return self._handle_for(request, on_token=on_token)
+
+    def submit_resume(self, request: GenerationRequest,
+                      tokens=(), logprobs=None,
+                      on_token=None) -> RequestHandle:
+        """Enqueue a request that already generated ``tokens`` somewhere
+        else (a worker that died mid-stream): admission re-prefills
+        prompt + tokens[:-1] and replays the stash, exactly the
+        preempt/resume path, so the continuation is byte-identical to
+        never having moved — sampling keys depend only on
+        (seed, position).  The replayed tokens re-emit through the
+        handle; cross-process consumers dedup on absolute index.
+        Empty ``tokens`` degrades to a plain ``submit``."""
+        tokens = [int(t) for t in tokens]
+        lps = [float(x) for x in (logprobs if logprobs is not None else ())]
+        if tokens and len(lps) != len(tokens):
+            lps = [0.0] * len(tokens)
+        self.queue.submit(self.slots.validate(request))
+        if tokens:
+            self._resume[request.req_id] = (tokens, lps)
         return self._handle_for(request, on_token=on_token)
 
     def _handle_for(self, req: GenerationRequest,
@@ -1459,6 +1483,8 @@ class ContinuousBatchingEngine:
         out = handle._finish(reason, now)
         self.results[handle.req_id] = out
         self._latency_window.append((out.ttft_s, out.tpot_s))
+        if self.on_finish is not None:
+            self.on_finish(handle, out)
 
     def _finish(self, slot: Slot, now: float = 0.0) -> None:
         self._sync_handle(slot, now)

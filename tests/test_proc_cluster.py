@@ -1,0 +1,231 @@
+"""Process-cluster serving: result-plane rehydration, OS-process
+workers, and the fault-tolerant supervisor.
+
+* ``RequestHandle.apply_event`` — token-event dedup on absolute index,
+  finish-event authority, metric accounting (fast, no processes).
+* 2-process ``ProcClusterFrontEnd`` greedy outputs byte-identical to a
+  single in-process reference engine (same cfg + seed ⇒ same weights).
+* SIGKILL a worker mid-stream: the supervisor re-routes its in-flight
+  requests to the survivor via resume-by-re-prefill with byte-identical
+  greedy output, no orphaned KV blocks, and ``summary()`` reporting the
+  failure/re-route counts.
+
+Process-spawn tests are marked ``slow`` (each worker boots its own JAX
+runtime and compiles its own engine) — CI fast deselects them; nightly
+runs the full set.
+"""
+import dataclasses
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.serve import (
+    ContinuousBatchingEngine, GenerationRequest, ProcClusterFrontEnd,
+    RequestHandle, SamplingParams,
+)
+
+SEED = 0
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(reduced(ARCHS["smollm-135m"]),
+                               dtype="float32")
+
+
+def _greedy_requests(cfg, n, max_new=8, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(
+            1, cfg.vocab_size, size=int(rng.integers(6, 20))).astype(np.int32)
+        reqs.append(GenerationRequest(
+            prompt, max_new_tokens=max_new,
+            sampling=SamplingParams(temperature=0.0)))
+    return reqs
+
+
+def _reference_outputs(cfg, requests, **engine_kwargs):
+    """Single in-process engine ground truth for byte-identity checks:
+    worker processes rebuild the same weights from the shared seed, so
+    placement (which worker, failure or not) must never change tokens."""
+    eng = ContinuousBatchingEngine(cfg, seed=SEED, **engine_kwargs)
+    handles = [eng.submit(dataclasses.replace(r)) for r in requests]
+    eng.run()
+    return [h.result(timeout=0.0).tokens.tolist() for h in handles]
+
+
+# ------------------------------------------------ handle rehydration
+
+def _handle(max_new=8, logprobs=False):
+    return RequestHandle(GenerationRequest(
+        np.asarray([1, 2, 3], np.int32), max_new_tokens=max_new,
+        sampling=SamplingParams(temperature=0.0, logprobs=logprobs)))
+
+
+def test_apply_event_streams_tokens_and_finishes():
+    h = _handle()
+    seen = []
+    h.on_token = seen.append
+    h.apply_event({"ev": "token", "req": h.req_id, "i": 0, "t": 7,
+                   "lp": -0.5})
+    h.apply_event({"ev": "token", "req": h.req_id, "i": 1, "t": 9,
+                   "lp": -0.25})
+    assert not h.finished and seen == [7, 9]
+    h.apply_event({"ev": "finish", "req": h.req_id, "tokens": [7, 9],
+                   "logprobs": [-0.5, -0.25], "finish_reason": "length",
+                   "queue_wait_s": 0.125})
+    out = h.result(timeout=0.0)
+    assert out.tokens.tolist() == [7, 9]
+    assert out.finish_reason == "length"
+    assert out.queue_wait_s == 0.125
+    assert out.ttft_s >= 0.0
+    assert list(h) == [7, 9]          # stream iterator replays + closes
+
+
+def test_apply_event_dedups_replayed_prefix():
+    """A re-routed request replays its stash through the survivor's
+    handle; the parent handle must dedup on the ABSOLUTE index so
+    consumers never see a token twice."""
+    h = _handle()
+    seen = []
+    h.on_token = seen.append
+    for i, t in enumerate([5, 6, 7]):
+        h.apply_event({"ev": "token", "req": h.req_id, "i": i, "t": t})
+    # survivor replays indices 0..3 (stash + one fresh token)
+    for i, t in enumerate([5, 6, 7, 8]):
+        h.apply_event({"ev": "token", "req": h.req_id, "i": i, "t": t})
+    assert h.tokens == [5, 6, 7, 8]
+    assert seen == [5, 6, 7, 8]
+
+
+def test_apply_event_finish_backfills_missing_tokens():
+    """The finish event is authoritative: tokens that never arrived as
+    token events (worker died between emits) backfill at finish."""
+    h = _handle(logprobs=True)
+    h.apply_event({"ev": "token", "req": h.req_id, "i": 0, "t": 3,
+                   "lp": -1.0})
+    h.apply_event({"ev": "finish", "req": h.req_id, "tokens": [3, 4, 5],
+                   "logprobs": [-1.0, -2.0, -3.0],
+                   "finish_reason": "stop", "queue_wait_s": 0.0})
+    out = h.result(timeout=0.0)
+    assert out.tokens.tolist() == [3, 4, 5]
+    assert out.logprobs.tolist() == [-1.0, -2.0, -3.0]
+    # events after finish are late duplicates from a dead worker: ignored
+    h.apply_event({"ev": "token", "req": h.req_id, "i": 3, "t": 9})
+    assert h.tokens == [3, 4, 5]
+
+
+def test_apply_event_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown result-plane event"):
+        _handle().apply_event({"ev": "gibberish"})
+
+
+# ------------------------------------------------- process round-trip
+
+@pytest.mark.slow
+def test_proc_cluster_greedy_matches_local_reference(cfg):
+    requests = _greedy_requests(cfg, 6)
+    want = _reference_outputs(cfg, requests, max_slots=2, max_seq=64)
+    with ProcClusterFrontEnd(cfg, n_workers=2, policy="xartrek",
+                             seed=SEED, max_slots=2, max_seq=64) as fe:
+        fe.warmup(timeout=300.0)
+        for r in requests:
+            fe.submit(r)
+        outs = fe.drain(timeout=120.0)
+    got = [outs[r.req_id].tokens.tolist() for r in requests]
+    assert got == want
+    assert all(outs[r.req_id].finish_reason == "length" for r in requests)
+    # both workers actually served (least-loaded routing spreads 6 reqs)
+    assert len(set(fe.last_owners.values())) == 2
+
+
+@pytest.mark.slow
+def test_proc_cluster_sigkill_reroutes_byte_identical(cfg):
+    requests = _greedy_requests(cfg, 6, max_new=24, seed=3)
+    kw = dict(max_slots=2, max_seq=96, paged=True, block_size=16,
+              num_blocks=64)
+    want = _reference_outputs(cfg, requests, **kw)
+    with ProcClusterFrontEnd(cfg, n_workers=2, policy="xartrek",
+                             seed=SEED, **kw) as fe:
+        fe.warmup(timeout=300.0)
+        handles = [fe.submit(r) for r in requests]
+        victim = fe.workers[0]
+        victim_handles = [h for h in handles
+                          if fe._owner[h.req_id] is victim]
+        assert victim_handles, "routing should give worker 0 requests"
+        # wait until the victim is genuinely mid-stream: it has emitted
+        # tokens but no victim-owned request is anywhere near done
+        deadline = time.monotonic() + 120.0
+        while (not any(h.tokens for h in victim_handles)
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        assert any(h.tokens for h in victim_handles)
+        assert not all(h.finished for h in victim_handles)
+        os.kill(victim.process.pid, signal.SIGKILL)
+        outs = fe.drain(timeout=240.0)
+        s = fe.summary()
+    got = [outs[r.req_id].tokens.tolist() for r in requests]
+    assert got == want                      # byte-identical across kill
+    assert s["failures"] == 1
+    assert s["rerouted"] >= 1
+    assert s["workers"]["pw0"]["failed"] is True
+    assert s["workers"]["pw1"]["alive"] is True
+    # every re-routed request's final owner is the survivor
+    dead_owned = [rid for rid, wid in fe.last_owners.items()
+                  if wid == "pw0"]
+    assert not dead_owned or all(outs[rid].finish_reason == "length"
+                                 for rid in dead_owned)
+    # no orphaned KV blocks on the survivor once drained
+    pool = s["pools"]["pw1"]
+    assert pool["free_blocks"] == pool["num_blocks"]
+
+
+@pytest.mark.slow
+def test_proc_cluster_disaggregated_roles_across_processes(cfg):
+    """Prefill/decode split over real processes: long prompts prefill
+    on the prefill worker, the span rides the central handoff op into
+    the decode owner's process, and outputs stay byte-identical."""
+    rng = np.random.default_rng(11)
+    requests = [GenerationRequest(
+        rng.integers(1, cfg.vocab_size, size=s).astype(np.int32),
+        max_new_tokens=6, sampling=SamplingParams(temperature=0.0))
+        for s in (4, 24, 40)]           # short stays local, long spans
+    kw = dict(max_slots=2, max_seq=96, paged=True, block_size=16,
+              num_blocks=64)
+    want = _reference_outputs(cfg, requests, **kw)
+    with ProcClusterFrontEnd(cfg, n_workers=2, policy="xartrek",
+                             seed=SEED, roles=("prefill", "mixed"),
+                             **kw) as fe:
+        fe.warmup(timeout=300.0)
+        for r in requests:
+            fe.submit(r)
+        outs = fe.drain(timeout=120.0)
+        s = fe.summary()
+    assert [outs[r.req_id].tokens.tolist() for r in requests] == want
+    assert s["handoffs"] >= 2           # both long prompts spanned
+    assert s["roles"] == {"pw0": "prefill", "pw1": "mixed"}
+
+
+@pytest.mark.slow
+def test_proc_cluster_abort_round_trip(cfg):
+    """abort() crosses the process boundary: the worker engine finishes
+    the request as aborted and the finish event closes the handle."""
+    requests = _greedy_requests(cfg, 2, max_new=48, seed=7)
+    with ProcClusterFrontEnd(cfg, n_workers=1, policy="xartrek",
+                             seed=SEED, max_slots=2, max_seq=96) as fe:
+        fe.warmup(timeout=300.0)
+        h0 = fe.submit(requests[0])
+        h1 = fe.submit(requests[1])
+        deadline = time.monotonic() + 60.0
+        while not h0.tokens and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert h0.abort()
+        outs = fe.drain(timeout=120.0)
+    assert outs[h0.req_id].finish_reason == "aborted"
+    assert outs[h1.req_id].finish_reason == "length"
+    assert len(outs[h1.req_id].tokens) == 48

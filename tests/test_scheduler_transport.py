@@ -90,6 +90,98 @@ def test_tcp_missing_field_reports_error(tcp):
     assert "error" in resp
 
 
+def test_tcp_heartbeat_op_records_liveness(tcp):
+    srv, addr = tcp
+    client = TcpSchedulerClient("hb", addr)
+    try:
+        t0 = time.monotonic()
+        client.heartbeat("w0", 0)
+        client.heartbeat("w0", 1, info={"slots": 2})
+        client.heartbeat("w1", 0)
+        beats = srv.inner.heartbeats
+        assert beats["w0"]["seq"] == 1
+        assert beats["w0"]["info"] == {"slots": 2}
+        assert beats["w1"]["seq"] == 0
+        assert beats["w0"]["t"] >= t0      # parent-clock timestamps
+    finally:
+        client.close()
+
+
+def test_tcp_kernel_op_registers_remote_residency(tcp):
+    """A worker in another process reports its bank state: the central
+    table's hw_kernel pins to the REMOTE name and residency() answers
+    from the remote snapshot when the server has no local bank."""
+    platform = DEFAULT_PLATFORM
+    bankless = SchedulerServer(platform, ThresholdTable(), bank=None,
+                               monitor=LoadMonitor(platform),
+                               policy="xartrek")
+    with TcpSchedulerServer(bankless) as srv:
+        client = TcpSchedulerClient("w0_decode", srv.address)
+        try:
+            client.register_remote_kernel("w0_decode", "w0_decode",
+                                          True, False)
+            assert bankless.table.row("w0_decode").hw_kernel == "w0_decode"
+            res = bankless.residency("w0_decode")
+            assert res.resident and not res.loading
+            # unreported kernels answer cold, not KeyError
+            assert not bankless.residency("nope").resident
+        finally:
+            client.close()
+
+
+def test_tcp_server_stop_is_idempotent_and_releases_port():
+    srv = TcpSchedulerServer(_server())
+    addr = srv.start()
+    srv.stop()
+    srv.stop()                          # second stop: no-op, no raise
+    # the listener socket is gone: the port is rebindable immediately
+    probe = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    probe.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    probe.bind(addr)
+    probe.close()
+    # an unstarted server's stop must still close its listener
+    srv2 = TcpSchedulerServer(_server())
+    srv2.stop()
+    srv2.stop()
+
+
+def test_tcp_client_raises_on_server_error_response(tcp):
+    """Server-side failures surface as RuntimeError at the client (not
+    a KeyError three frames up), and the connection keeps serving."""
+    _, addr = tcp
+    client = TcpSchedulerClient("errs", addr)
+    try:
+        with pytest.raises(RuntimeError, match="heartbeat.*failed"):
+            client._rpc({"op": "heartbeat"})    # missing fields
+        assert client.before_call().target == TargetKind.AUX
+    finally:
+        client.close()
+    client.close()                      # close-after-close: no raise
+
+
+def test_tcp_client_raises_connection_error_on_dead_server():
+    """A peer that hangs up mid-rpc surfaces as ConnectionError, not an
+    empty-line JSONDecodeError."""
+    lst = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+
+    def accept_and_hang_up():
+        conn, _ = lst.accept()
+        conn.close()
+
+    t = threading.Thread(target=accept_and_hang_up, daemon=True)
+    t.start()
+    client = TcpSchedulerClient("w", lst.getsockname())
+    try:
+        with pytest.raises(ConnectionError):
+            client.heartbeat("w", 0)
+    finally:
+        client.close()
+        t.join(5.0)
+        lst.close()
+
+
 # -------------------------------------------------------------- KernelBank
 
 def _tick_clock():

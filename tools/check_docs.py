@@ -1,6 +1,7 @@
 """Docs CI gate: intra-repo markdown links must resolve and every
-public ``repro.serve`` / ``repro.kernels`` module must carry a module
-docstring.
+public ``repro.serve`` / ``repro.kernels`` / ``repro.core`` module
+(``serve/proc.py``'s process-cluster subsystem included) must carry a
+module docstring.
 
 Pure stdlib + AST — no imports of repro itself, so the check runs in
 the lint environment without jax installed.
@@ -26,7 +27,8 @@ import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-DOCSTRING_PACKAGES = ("src/repro/serve", "src/repro/kernels")
+DOCSTRING_PACKAGES = ("src/repro/serve", "src/repro/kernels",
+                      "src/repro/core")
 SKIP_DIRS = {".git", ".github", "__pycache__", ".venv", "node_modules",
              "artifacts"}
 
